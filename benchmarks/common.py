@@ -1,0 +1,28 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+ROWS: List[Dict] = []
+
+
+def emit(table: str, name: str, **fields):
+    row = {"table": table, "name": name, **fields}
+    ROWS.append(row)
+    kv = " ".join(f"{k}={v}" for k, v in fields.items())
+    print(f"[{table}] {name}: {kv}", flush=True)
+
+
+def time_call(fn: Callable[[], object], iters: int = 5,
+              warmup: int = 1) -> float:
+    """Seconds per call; fn must return something to block on."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters

@@ -1,0 +1,38 @@
+"""Paper Fig. 8b: algorithm robustness — SAC / TD3 / DDPG through the
+same Spreeze pipeline. The paper's point: under strong parallelization
+the gap between off-policy algorithms shrinks; every algorithm must
+train without framework-side special-casing.
+
+(Fig. 8a's device robustness — desktop/server/laptop — is the adaptation
+story: bench table3 shows the auto-tuned values for THIS device; the
+paper's 2048/4 laptop and 16384/16 server rows correspond to other
+points on the same convex curves.)
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit
+from repro.core import SpreezeConfig, SpreezeTrainer
+
+
+def main(seconds: float = 30.0):
+    for algo in ("sac", "td3", "ddpg"):
+        cfg = SpreezeConfig(env_name="pendulum", algo=algo, num_envs=8,
+                            batch_size=256, chunk_len=16,
+                            updates_per_round=8, warmup_frames=2048,
+                            eval_every_rounds=20, eval_episodes=4)
+        hist = SpreezeTrainer(cfg).train(max_seconds=seconds,
+                                         target_return=-200.0)
+        emit("fig8b", algo,
+             solve_s=(round(hist.solved_time, 1) if hist.solved_time
+                      else "unsolved"),
+             final_return=round(hist.eval_returns[-1], 1),
+             sampling_hz=round(hist.sampling_hz),
+             update_hz=round(hist.update_hz, 1))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=30.0)
+    main(ap.parse_args().seconds)

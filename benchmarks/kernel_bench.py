@@ -1,0 +1,48 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle on CPU.
+
+Wall time on CPU interpret mode is NOT the TPU story (interpret executes
+the kernel body in Python); this bench exists to (1) exercise the kernels
+at realistic tile shapes and (2) record the oracle-path XLA-CPU numbers
+that the throughput tables build on. TPU-side performance is covered by
+the roofline analysis of the lowered HLO instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # attention: one prefill-ish tile set
+    B, S, H, KV, d = 1, 512, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+    t_ref = time_call(jax.jit(
+        lambda: ref.attention_ref(q, k, v, causal=True)), 3)
+    emit("kernels", "attention-oracle-xla", shape=f"{B}x{S}x{H}x{d}",
+         ms=round(t_ref * 1e3, 2))
+
+    # ssd: mamba2-like tile
+    B2, S2, H2, P2, N2 = 1, 512, 4, 64, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B2, S2, H2, P2), jnp.float32) * 0.3
+    dtA = -jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, H2))) * 0.3
+    Bm = jax.random.normal(ks[2], (B2, S2, H2, N2), jnp.float32) * 0.3
+    Cm = jax.random.normal(ks[3], (B2, S2, H2, N2), jnp.float32) * 0.3
+    from repro.models.ssm import ssd_chunked
+    t_chunk = time_call(jax.jit(
+        lambda: ssd_chunked(x, dtA, Bm, Cm, 64)), 3)
+    emit("kernels", "ssd-chunked-xla", shape=f"{B2}x{S2}x{H2}x{P2}",
+         ms=round(t_chunk * 1e3, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Roofline table: read reports/dryrun/*.json, print the per-(arch x shape
+x mesh) three-term roofline with bottleneck + useful-flops ratio.
+
+Run ``python -m repro.launch.dryrun --all [--multipod]`` first; this
+module only aggregates (it never initializes 512 devices itself).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "bottleneck", "useful_ratio", "peak_memory_per_device")
+
+
+def load(report_dir: str = REPORT_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    if "skipped" in r:
+        return (f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+                f"SKIP ({r['skipped'][:60]}...)")
+    if "error" in r:
+        return (f"{r['arch']:<18} {r['shape']:<12} "
+                f"ERROR {r['error'][:70]}")
+    gib = r["peak_memory_per_device"] / 2**30
+    return (f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+            f"{r['compute_s']:.3e} {r['memory_s']:.3e} "
+            f"{r['collective_s']:.3e}  {r['bottleneck']:<10} "
+            f"{r['useful_ratio']:.3f}  {gib:7.2f}")
+
+
+def main(report_dir: str = REPORT_DIR):
+    recs = load(report_dir)
+    if not recs:
+        print("no dry-run reports found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(f"{'arch':<18} {'shape':<12} {'mesh':<8} "
+          f"{'compute_s':>9} {'memory_s':>9} {'coll_s':>9}  "
+          f"{'bottleneck':<10} {'useful':>6} {'GiB/dev':>8}")
+    for r in recs:
+        if "mode" in r:       # spreeze RL / arch records have their own shape
+            print(f"[{r['mode']}] " + ", ".join(
+                f"{k}={v}" for k, v in r.items()
+                if k in ("arch", "algo", "mesh", "placement", "batch",
+                         "collective_bytes_per_device")))
+            continue
+        print(fmt_row(r))
+    # bottleneck census
+    census: Dict[str, int] = {}
+    for r in recs:
+        b = r.get("bottleneck")
+        if b:
+            census[b] = census.get(b, 0) + 1
+    print("\nbottleneck census:", census)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=REPORT_DIR)
+    main(ap.parse_args().dir)

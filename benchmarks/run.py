@@ -1,0 +1,56 @@
+"""Benchmark entry point: ``python -m benchmarks.run [--full]``.
+
+One section per paper table/figure (see the per-module docstrings for the
+paper mapping), plus the roofline aggregation over any dry-run reports
+present. Quick mode keeps the total run in a few minutes; ``--full``
+lengthens the RL arms to paper-protocol durations.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=("table1", "table2", "table3", "fig6", "fig8",
+                             "roofline", "kernels"))
+    args = ap.parse_args(argv)
+    t0 = time.perf_counter()
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("table2"):
+        from benchmarks import table2_throughput
+        table2_throughput.main(seconds=20.0 if args.full else 8.0)
+    if want("table3"):
+        from benchmarks import table3_hyperparams
+        table3_hyperparams.main(iters=5 if args.full else 2)
+    if want("fig6"):
+        from benchmarks import fig6_ablations
+        fig6_ablations.main(seconds=60.0 if args.full else 15.0)
+    if want("table1"):
+        from benchmarks import table1_time_to_solve
+        table1_time_to_solve.main(quick=not args.full)
+    if want("fig8"):
+        from benchmarks import fig8_robustness
+        fig8_robustness.main(seconds=150.0 if args.full else 90.0)
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.main()
+
+    from benchmarks.common import ROWS
+    print(f"\n{len(ROWS)} benchmark rows in "
+          f"{time.perf_counter() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Paper Table 2: hardware usage + throughput across configurations.
+
+Measures, per configuration: sampling frame rate (Hz), network update
+frame rate (Hz = update frequency x batch), and update frequency — the
+paper's headline columns. CPU/GPU "usage" has no meaning on this
+container; the measured steps/s of each compiled function is the signal
+the paper's utilization monitoring was a proxy for (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit
+from repro.core import SpreezeConfig, SpreezeTrainer
+
+CONFIGS = [
+    # name, batch_size, num_envs, transfer, queue_size, prioritized
+    ("spreeze",          8192, 16, "shared", 0, False),
+    ("spreeze-bs128",     128, 16, "shared", 0, False),
+    ("spreeze-bs32768", 32768, 16, "shared", 0, False),
+    ("spreeze-sp2",      8192,  2, "shared", 0, False),
+    ("spreeze-per",      8192, 16, "shared", 0, True),   # APE-X-style PER
+    ("queue-qs5000",     8192, 16, "queue", 5000, False),
+    ("queue-qs20000",    8192, 16, "queue", 20000, False),
+]
+
+
+def run_config(name, batch_size, num_envs, transfer, queue_size,
+               prioritized, seconds: float):
+    cfg = SpreezeConfig(
+        env_name="pendulum", algo="sac", num_envs=num_envs,
+        batch_size=batch_size, chunk_len=16, updates_per_round=4,
+        warmup_frames=1024, eval_every_rounds=10**9,  # no eval: pure thru
+        transfer=transfer, queue_size=queue_size or 20000,
+        prioritized=prioritized)
+    tr = SpreezeTrainer(cfg)
+    hist = tr.train(max_seconds=seconds)
+    emit("table2", name,
+         batch=batch_size, envs=num_envs, transfer=transfer,
+         sampling_hz=round(hist.sampling_hz),
+         update_freq_hz=round(hist.update_hz, 1),
+         update_frame_hz=f"{hist.update_frame_hz:.3g}",
+         transfer_cycle_s=round(hist.transfer_stats["transfer_cycle_s"], 2),
+         transmission_loss=round(
+             hist.transfer_stats["transmission_loss"], 3))
+
+
+def main(seconds: float = 12.0):
+    for row in CONFIGS:
+        run_config(*row, seconds=seconds)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=12.0)
+    main(ap.parse_args().seconds)

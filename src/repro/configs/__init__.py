@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_config(arch_id)`` and ``ARCHS``."""
+from repro.configs.base import InputShape, ModelConfig, MoEConfig, RunConfig, SSMConfig
+from repro.configs.shapes import SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
+
+from repro.configs import (
+    smollm_360m, qwen2_5_32b, mixtral_8x7b, whisper_medium, mamba2_130m,
+    paligemma_3b, h2o_danube_1_8b, qwen2_0_5b, kimi_k2_1t_a32b, zamba2_1_2b,
+)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        smollm_360m, qwen2_5_32b, mixtral_8x7b, whisper_medium, mamba2_130m,
+        paligemma_3b, h2o_danube_1_8b, qwen2_0_5b, kimi_k2_1t_a32b,
+        zamba2_1_2b,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_shape(shape_id: str) -> InputShape:
+    if shape_id not in SHAPES:
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}")
+    return SHAPES[shape_id]
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "MoEConfig", "SSMConfig", "InputShape",
+    "RunConfig", "get_config", "get_shape",
+]

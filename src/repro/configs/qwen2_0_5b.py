@@ -1,0 +1,21 @@
+"""Qwen2-0.5B — dense, GQA, QKV bias, tied embeddings.
+
+[arXiv:2407.10671] 24L, d_model=896, 14 heads (GQA kv=2), d_ff=4864,
+vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    source="arXiv:2407.10671",
+)

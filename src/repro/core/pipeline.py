@@ -1,0 +1,321 @@
+"""The Spreeze orchestrator: asynchronous sampler / updater / eval pipeline.
+
+Paper (§3.1, Fig. 1/4b): N sampler processes, one network-update process,
+one test process and one visualization process run *fully asynchronously*,
+exchanging experience through shared RAM and weights through SSD.
+
+TPU/JAX mapping (DESIGN.md §2): a single-controller program where each
+"process" is a compiled function and asynchrony comes from JAX async
+dispatch — the host enqueues a sampler chunk and K update steps without
+blocking on either, so device compute units overlap exactly the way the
+paper's processes overlap CPU/GPU. Experience moves through the
+device-resident replay ring (shared-memory path) or the host-queue
+baseline; weights move to eval either zero-copy ("live") or through
+``.npz`` checkpoints ("ssd" — the paper's channel).
+
+The sync-vs-async ablation (Fig. 4a vs 4b) is the ``sync_mode`` flag:
+sync blocks on every handoff (centrally-agreed transmission time), async
+never blocks except at metric log points.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transfer import make_transfer
+from repro.envs import base as env_base
+from repro.replay import buffer as rb
+from repro.rl.base import AlgoHP, get_algo
+from repro.train import checkpoint
+
+
+@dataclass
+class SpreezeConfig:
+    env_name: str = "pendulum"
+    algo: str = "sac"
+    # parallelization hyperparameters (the two the paper auto-tunes)
+    num_envs: int = 16            # "number of sampling processes"
+    batch_size: int = 8192
+    # pipeline
+    replay_capacity: int = 262_144
+    warmup_frames: int = 2_048
+    chunk_len: int = 32           # env steps fused into one sampler dispatch
+    updates_per_round: int = 4    # update steps dispatched per host loop
+    transfer: str = "shared"      # shared | queue
+    queue_size: int = 20_000
+    sync_mode: bool = False       # Fig. 4a baseline: block on every handoff
+    prioritized: bool = False     # APE-X-style PER on the shared pool
+    per_alpha: float = 0.6
+    per_beta: float = 0.4
+    nstep: int = 1                # n-step returns (APE-X uses 3)
+    weight_sync: str = "live"     # live | ssd (paper's channel)
+    # eval/vis "processes"
+    eval_every_rounds: int = 50
+    eval_episodes: int = 4
+    viz_every_rounds: int = 0     # 0 = off; paper's visualization process
+    viz_dir: Optional[str] = None  # .npz trajectories land here
+    seed: int = 0
+    hp: AlgoHP = field(default_factory=AlgoHP)
+
+    def __post_init__(self):
+        if self.hp.algo != self.algo:
+            self.hp = AlgoHP(**{**self.hp.__dict__, "algo": self.algo})
+
+
+@dataclass
+class TrainHistory:
+    """Metrics the paper reports (Tables 2/3, Fig. 5)."""
+    times: List[float] = field(default_factory=list)
+    eval_returns: List[float] = field(default_factory=list)
+    env_frames: List[int] = field(default_factory=list)
+    update_steps: List[int] = field(default_factory=list)
+    sampling_hz: float = 0.0
+    update_hz: float = 0.0            # update frequency (steps/s)
+    update_frame_hz: float = 0.0      # update frame rate (steps/s * batch)
+    transfer_stats: Dict[str, float] = field(default_factory=dict)
+    solved_time: Optional[float] = None
+
+    def record_eval(self, t, ret, frames, steps):
+        self.times.append(t)
+        self.eval_returns.append(ret)
+        self.env_frames.append(frames)
+        self.update_steps.append(steps)
+
+
+class SpreezeTrainer:
+    """End-to-end Spreeze training on a pure-JAX env."""
+
+    def __init__(self, cfg: SpreezeConfig):
+        self.cfg = cfg
+        self.env = env_base.make(cfg.env_name)
+        spec = self.env.spec
+        self.algo = get_algo(cfg.algo)
+        self.hp = cfg.hp
+        self.transfer = make_transfer(cfg.transfer, cfg.queue_size)
+
+        key = jax.random.PRNGKey(cfg.seed)
+        self.key, k_algo, k_env = jax.random.split(key, 3)
+        self.state = self.algo.init_state(k_algo, spec.obs_dim, spec.act_dim,
+                                          self.hp)
+        specs = rb.specs_for_env(spec.obs_dim, spec.act_dim)
+        specs["disc"] = ((), jnp.float32)   # gamma^k(1-done) per row
+        if cfg.prioritized:
+            from repro.replay import prioritized as per
+            if cfg.transfer != "shared":
+                raise ValueError("prioritized replay requires the "
+                                 "shared-memory transfer path")
+            self.replay = per.init_prioritized(cfg.replay_capacity, specs)
+            self.transfer = make_transfer("shared",
+                                          add_fn=per.add_batch_jit)
+        else:
+            self.replay = rb.init_replay(cfg.replay_capacity, specs)
+        self.env_states = self.env.reset_batch(k_env, cfg.num_envs)
+
+        self._build_compiled()
+        self.total_frames = 0
+        self.total_updates = 0
+
+    # ------------------------------------------------------------------ #
+    # compiled "processes"
+    # ------------------------------------------------------------------ #
+    def _build_compiled(self):
+        cfg, env, hp = self.cfg, self.env, self.hp
+        act = self.algo.make_act(hp)
+        act_det = self.algo.make_act(hp, deterministic=True)
+        update = self.algo.make_update_step(hp, env.spec.obs_dim,
+                                            env.spec.act_dim)
+
+        def sampler_chunk(actor, states, key):
+            """``chunk_len`` vectorized env steps under the live policy.
+            Returns (states', experience rows (T*N, ...), key', mean_rew)."""
+            def step(carry, _):
+                states, key = carry
+                key, k_act, k_reset = jax.random.split(key, 3)
+                obs = jax.vmap(env.observe)(states)
+                a = act(actor, obs, k_act)
+                nstates, nobs, rew, done = jax.vmap(env.autoreset_step)(
+                    states, a, jax.random.split(k_reset, cfg.num_envs))
+                exp = {"obs": obs, "act": a, "rew": rew,
+                       "next_obs": nobs, "done": done.astype(jnp.float32)}
+                return (nstates, key), exp
+
+            (states, key), exps = jax.lax.scan(
+                step, (states, key), None, length=cfg.chunk_len)
+            from repro.replay.nstep import nstep_chunk
+            exps = nstep_chunk(exps, cfg.nstep, hp.gamma)
+            flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in
+                    exps.items()}
+            return states, flat, key, exps["rew"].mean()
+
+        if cfg.prioritized:
+            from repro.replay import prioritized as per
+
+            def update_round(state, replay, key):
+                """K PER updates: sample -> weighted update -> re-prioritize."""
+                def one(carry, _):
+                    state, replay, key = carry
+                    key, k1, k2 = jax.random.split(key, 3)
+                    batch, idx, w = per.sample(
+                        replay, k1, cfg.batch_size,
+                        alpha=cfg.per_alpha, beta=cfg.per_beta)
+                    batch["weight"] = w
+                    state, metrics = update(state, batch, k2)
+                    replay = per.update_priorities(replay, idx,
+                                                   metrics["td_abs"])
+                    return (state, replay, key), metrics["critic_loss"]
+
+                (state, replay, key), closs = jax.lax.scan(
+                    one, (state, replay, key), None,
+                    length=cfg.updates_per_round)
+                return state, replay, key, closs.mean()
+        else:
+            def update_round(state, replay, key):
+                """K update steps on freshly sampled large batches."""
+                def one(carry, _):
+                    state, key = carry
+                    key, k1, k2 = jax.random.split(key, 3)
+                    batch = rb.sample(replay, k1, cfg.batch_size)
+                    state, metrics = update(state, batch, k2)
+                    return (state, key), metrics["critic_loss"]
+
+                (state, key), closs = jax.lax.scan(
+                    one, (state, key), None, length=cfg.updates_per_round)
+                return state, replay, key, closs.mean()
+
+        def eval_episode(actor, key):
+            state0 = env.reset(key)
+
+            def step(carry, _):
+                s, total = carry
+                a = act_det(actor, env.observe(s), None)
+                s, _, r, _ = env.step(s, a)
+                return (s, total + r), None
+
+            (s, total), _ = jax.lax.scan(
+                step, (state0, jnp.zeros(())), None,
+                length=env.spec.episode_len)
+            return total
+
+        def eval_batch(actor, key):
+            return jax.vmap(lambda k: eval_episode(actor, k))(
+                jax.random.split(key, cfg.eval_episodes)).mean()
+
+        def viz_episode(actor, key):
+            """Deterministic rollout recording (obs, act, rew) — the
+            paper's visualization process, sans GUI: trajectories go to
+            .npz for offline rendering."""
+            state0 = env.reset(key)
+
+            def step(s, _):
+                obs = env.observe(s)
+                a = act_det(actor, obs, None)
+                s, _, r, _ = env.step(s, a)
+                return s, (obs, a, r)
+
+            _, (obs, a, r) = jax.lax.scan(
+                step, state0, None, length=env.spec.episode_len)
+            return obs, a, r
+
+        self._viz = jax.jit(viz_episode)
+        self._sampler = jax.jit(sampler_chunk, donate_argnums=(1,))
+        self._update_round = jax.jit(update_round, donate_argnums=(0, 1))
+        self._eval = jax.jit(eval_batch)
+
+    # ------------------------------------------------------------------ #
+    # weight sync to the eval/vis "processes"
+    # ------------------------------------------------------------------ #
+    def _actor_for_eval(self):
+        if self.cfg.weight_sync == "live":
+            return self.state.actor                    # zero-copy
+        # SSD path: write-then-read .npz (atomic, as the paper requires)
+        path = getattr(self, "_ssd_path", None)
+        if path is None:
+            d = tempfile.mkdtemp(prefix="spreeze_ssd_")
+            path = self._ssd_path = os.path.join(d, "actor.npz")
+        checkpoint.save(path, self.state.actor)
+        actor, _ = checkpoint.restore(path, self.state.actor)
+        return actor
+
+    # ------------------------------------------------------------------ #
+    # the training loop (async by default)
+    # ------------------------------------------------------------------ #
+    def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
+              target_return: Optional[float] = None,
+              log_cb: Optional[Callable] = None) -> TrainHistory:
+        cfg = self.cfg
+        hist = TrainHistory()
+        frames_per_chunk = cfg.num_envs * cfg.chunk_len
+
+        # ---- warmup: fill the pool with random-policy experience --------
+        while self.total_frames < cfg.warmup_frames:
+            self.env_states, exp, self.key, _ = self._sampler(
+                self.state.actor, self.env_states, self.key)
+            self.replay = self.transfer.push(self.replay, exp)
+            self.replay = self.transfer.flush(self.replay)
+            self.total_frames += frames_per_chunk
+        self.replay = self.transfer.flush(self.replay, force=True)
+        jax.block_until_ready(jax.tree.leaves(self.replay))
+
+        t0 = time.perf_counter()
+        round_i = 0
+        solved_at = None
+        while True:
+            now = time.perf_counter() - t0
+            if now >= max_seconds or self.total_frames >= max_frames:
+                break
+            # --- sampler "process": dispatch, don't block -----------------
+            self.env_states, exp, self.key, _ = self._sampler(
+                self.state.actor, self.env_states, self.key)
+            self.replay = self.transfer.push(self.replay, exp)
+            self.total_frames += frames_per_chunk
+            if cfg.sync_mode:
+                jax.block_until_ready(exp)     # Fig. 4a: wait at the handoff
+            # --- updater "process" ----------------------------------------
+            self.replay = self.transfer.flush(self.replay)
+            self.state, self.replay, self.key, closs = self._update_round(
+                self.state, self.replay, self.key)
+            self.total_updates += cfg.updates_per_round
+            if cfg.sync_mode:
+                jax.block_until_ready(closs)
+            # --- visualization "process" -----------------------------------
+            if cfg.viz_every_rounds and round_i % cfg.viz_every_rounds == 0:
+                obs, act_tr, rew = self._viz(
+                    self._actor_for_eval(),
+                    jax.random.fold_in(self.key, 7 + round_i))
+                if cfg.viz_dir:
+                    import numpy as np
+                    os.makedirs(cfg.viz_dir, exist_ok=True)
+                    np.savez(os.path.join(cfg.viz_dir,
+                                          f"traj_{round_i:06d}.npz"),
+                             obs=np.asarray(obs), act=np.asarray(act_tr),
+                             rew=np.asarray(rew))
+            # --- eval "process" -------------------------------------------
+            if round_i % cfg.eval_every_rounds == 0:
+                ret = float(self._eval(self._actor_for_eval(),
+                                       jax.random.fold_in(self.key, round_i)))
+                t = time.perf_counter() - t0
+                hist.record_eval(t, ret, self.total_frames,
+                                 self.total_updates)
+                if log_cb:
+                    log_cb(t, ret, self.total_frames, self.total_updates)
+                if (target_return is not None and ret >= target_return
+                        and solved_at is None):
+                    solved_at = t
+                    break
+            round_i += 1
+
+        jax.block_until_ready(self.state.step)
+        wall = time.perf_counter() - t0
+        hist.sampling_hz = self.total_frames / wall
+        hist.update_hz = self.total_updates / wall
+        hist.update_frame_hz = hist.update_hz * cfg.batch_size
+        hist.transfer_stats = self.transfer.stats()
+        hist.solved_time = solved_at
+        return hist

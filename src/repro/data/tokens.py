@@ -1,0 +1,51 @@
+"""Synthetic token / frame / patch pipeline.
+
+Deterministic PRNG streams sized by (cfg, shape); used by the example
+drivers and throughput benches. ``make_batch`` produces concrete arrays,
+``batch_iterator`` an infinite stream with per-step folding.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def text_len(cfg: ModelConfig, shape_seq: int) -> int:
+    """Token count for the given total sequence length (VLMs reserve the
+    patch prefix inside the assigned seq_len)."""
+    if cfg.family == "vlm":
+        return shape_seq - cfg.num_patch_tokens
+    return shape_seq
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key,
+               batch: int | None = None, seq: int | None = None
+               ) -> Dict[str, jax.Array]:
+    B = batch or shape.global_batch
+    S = seq or shape.seq_len
+    st = text_len(cfg, S)
+    k1, k2 = jax.random.split(key)
+    out = {"tokens": jax.random.randint(k1, (B, st), 0, cfg.vocab_size,
+                                        dtype=jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k2, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k2, (B, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def batch_iterator(cfg: ModelConfig, shape: InputShape, seed: int = 0,
+                   batch: int | None = None, seq: int | None = None
+                   ) -> Iterator[Dict[str, jax.Array]]:
+    key = jax.random.PRNGKey(seed)
+    i = 0
+    while True:
+        yield make_batch(cfg, shape, jax.random.fold_in(key, i),
+                         batch=batch, seq=seq)
+        i += 1

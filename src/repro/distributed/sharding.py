@@ -1,0 +1,220 @@
+"""Mesh-agnostic sharding rules.
+
+The model code annotates tensors with *logical* axis names; a ``MeshRules``
+context maps them to physical mesh axes. With no rules active every
+annotation is the identity, so the same model code runs on one CPU device,
+in the 512-device dry-run, and in Spreeze AC-parallel mode.
+
+Logical axes used by the model stack
+------------------------------------
+``batch``   data-parallel batch dim            -> ("data",) or ("pod","data")
+``seq``     sequence dim (context parallelism) -> "model"
+``fsdp``    param dim sharded over data axis   -> "data"
+``tp``      param dim sharded over model axis  -> "model"
+``ac``      actor/critic ensemble dim (Spreeze model parallelism) -> "ac"/"pod"
+
+Head counts of the assigned archs (14/15/40/...) are not divisible by the
+model-axis size, so this framework deliberately does NOT use Megatron-style
+head sharding; attention is context-parallel instead (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh] = None
+    batch: Optional[Tuple[str, ...]] = None   # physical axes for batch dim
+    seq: Optional[str] = None                 # physical axis for sequence dim
+    fsdp: Optional[str] = None                # param axis over data
+    tp: Optional[str] = None                  # param axis over model
+    ac: Optional[str] = None                  # spreeze actor/critic axis
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, physical: Optional[Union[str, Tuple[str, ...]]]) -> int:
+        if physical is None or self.mesh is None:
+            return 1
+        if isinstance(physical, str):
+            physical = (physical,)
+        n = 1
+        for a in physical:
+            n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, logical: Logical):
+        """logical name -> physical mesh axis (or axes tuple)."""
+        if logical is None:
+            return None
+        if isinstance(logical, tuple):
+            out = []
+            for l in logical:
+                r = self.resolve(l)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        return {
+            "batch": self.batch,
+            "seq": self.seq,
+            "fsdp": self.fsdp,
+            "tp": self.tp,
+            "ac": self.ac,
+        }[logical]
+
+    def spec(self, *logical: Logical) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def named(self, *logical: Logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_RULES: contextvars.ContextVar[MeshRules] = contextvars.ContextVar(
+    "mesh_rules", default=MeshRules())
+
+
+def current_rules() -> MeshRules:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def standard_rules(mesh: Optional[Mesh], *, sequence_parallel: bool = True,
+                   fsdp: bool = True, tensor_parallel: bool = True,
+                   data_axes: Optional[Tuple[str, ...]] = None) -> MeshRules:
+    """Default mapping for a ("data","model") or ("pod","data","model") mesh."""
+    if mesh is None:
+        return MeshRules()
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    batch = data_axes or (("pod", "data") if has_pod else ("data",))
+    return MeshRules(
+        mesh=mesh,
+        batch=batch,
+        seq="model" if sequence_parallel else None,
+        fsdp="data" if fsdp else None,
+        tp="model" if tensor_parallel else None,
+        ac="pod" if has_pod else None,
+    )
+
+
+def spreeze_rules(mesh: Mesh, **kw) -> MeshRules:
+    """Spreeze AC model parallelism: the pod axis shards the actor/critic
+    ensemble instead of the batch (paper §3.2.2, dual-GPU -> dual-pod)."""
+    r = standard_rules(mesh, data_axes=("data",), **kw)
+    return replace(r, ac="pod" if "pod" in mesh.axis_names else None)
+
+
+# ---------------------------------------------------------------------------
+# activation / param annotation
+# ---------------------------------------------------------------------------
+
+def shard(x: jax.Array, *logical: Logical) -> jax.Array:
+    """with_sharding_constraint under the active rules (identity if none).
+
+    A constraint whose every dim resolves to None (e.g. decode: batch=1,
+    seq=1) is SKIPPED rather than pinned: pinning would force replication
+    over the model axis at every layer boundary and block SPMD from
+    propagating Megatron-style hidden-dim sharding (EXPERIMENTS §Perf,
+    h2o long_500k iteration 2)."""
+    r = current_rules()
+    if not r.active or x.ndim != len(logical):
+        return x
+    spec = r.spec(*logical)
+    resolved = [a for i, a in enumerate(spec)
+                if a is not None and x.shape[i] % r.axis_size(a) == 0]
+    if not resolved:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, spec))
+
+
+def param_spec(shape: Sequence[int], *, stacked: bool = False,
+               rules: Optional[MeshRules] = None,
+               expert_dim: Optional[int] = None) -> P:
+    """Greedy 2-D param sharding ("fsdp2d").
+
+    First dim divisible by the data-axis size -> "fsdp"; next dim divisible
+    by the model-axis size -> "tp". ``stacked`` protects dim 0 (the
+    layer-scan dim). ``expert_dim`` marks a MoE expert dim that should take
+    the model axis when divisible (expert parallelism).
+    """
+    r = rules or current_rules()
+    if not r.active:
+        return P()
+    fs, ts = r.axis_size(r.fsdp), r.axis_size(r.tp)
+    spec: list = [None] * len(shape)
+    start = 1 if stacked else 0
+    tp_done = fsdp_done = False
+    if expert_dim is not None and r.tp and shape[expert_dim] % ts == 0:
+        spec[expert_dim] = r.tp
+        tp_done = True
+    # prefer sharding the largest dims first for balance
+    order = sorted(range(start, len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is not None:
+            continue
+        if not fsdp_done and r.fsdp and shape[i] % fs == 0:
+            spec[i] = r.fsdp
+            fsdp_done = True
+        elif not tp_done and r.tp and shape[i] % ts == 0:
+            spec[i] = r.tp
+            tp_done = True
+    return P(*spec)
+
+
+def shard_param_like(x: jax.Array, *, stacked: bool = False,
+                     expert_dim: Optional[int] = None) -> jax.Array:
+    r = current_rules()
+    if not r.active:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, param_spec(x.shape, stacked=stacked,
+                                            expert_dim=expert_dim)))
+
+
+def params_sharding_tree(params, rules: Optional[MeshRules] = None):
+    """NamedSharding tree for a param pytree (dry-run ``in_shardings``).
+
+    Stacked (per-layer) params are recognized by path containing 'layers';
+    MoE expert params by leaf names starting with 'moe_w' / 'expert'.
+    """
+    r = rules or current_rules()
+    if not r.active:
+        return jax.tree.map(lambda _: None, params)
+
+    def one(path, leaf):
+        keys = [getattr(k, 'key', getattr(k, 'idx', '')) for k in path]
+        spath = "/".join(str(k) for k in keys)
+        stacked = "layers" in spath or "blocks" in spath
+        expert_dim = None
+        name = str(keys[-1]) if keys else ""
+        if name.startswith("moe_w") or name.startswith("expert"):
+            expert_dim = 1 if stacked else 0
+            shape = leaf.shape
+            if shape[expert_dim] % r.axis_size(r.tp) != 0:
+                expert_dim = None   # fall back to intra-expert tp
+        return NamedSharding(r.mesh, param_spec(
+            leaf.shape, stacked=stacked, rules=r, expert_dim=expert_dim))
+
+    return jax.tree_util.tree_map_with_path(one, params)

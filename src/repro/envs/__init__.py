@@ -1,0 +1,6 @@
+"""Pure-JAX environments; importing the package registers them all."""
+from repro.envs.base import Env, EnvSpec, env_names, make
+from repro.envs import (cartpole, hopper, pendulum,  # noqa: F401 (register)
+                        reacher)
+
+__all__ = ["Env", "EnvSpec", "env_names", "make"]

@@ -1,0 +1,83 @@
+"""Pure-JAX continuous-control environments.
+
+The paper samples experience from PyBullet/gym via CPU worker processes;
+here environments are pure ``jnp`` functions so thousands of instances
+roll out under ``vmap``+``scan`` on any backend — the TPU-native analogue
+of "as many sampler processes as the CPU has cores" (DESIGN.md §2).
+
+API (functional):
+  env.reset(key)            -> state pytree
+  env.step(state, action)   -> (state', obs, reward, done)
+  env.observe(state)        -> obs
+Actions are in [-1, 1]^act_dim; envs rescale internally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    act_dim: int
+    episode_len: int
+    # difficulty ladder position (paper: Pendulum < Walker < Ant < Humanoid)
+    difficulty: int = 0
+
+
+class Env:
+    spec: EnvSpec
+
+    def reset(self, key) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def step(self, state, action) -> Tuple[Dict, jax.Array, jax.Array,
+                                           jax.Array]:
+        raise NotImplementedError
+
+    def observe(self, state) -> jax.Array:
+        raise NotImplementedError
+
+    # -- vectorized helpers ------------------------------------------------
+    def reset_batch(self, key, n: int):
+        return jax.vmap(self.reset)(jax.random.split(key, n))
+
+    def step_batch(self, states, actions):
+        return jax.vmap(self.step)(states, actions)
+
+    def autoreset_step(self, state, action, key):
+        """Step that resets the env when the episode ends (for continuous
+        sampling streams). Returns (state', obs', reward, done)."""
+        nstate, obs, rew, done = self.step(state, action)
+        fresh = self.reset(key)
+        nstate = jax.tree.map(
+            lambda a, b: jnp.where(
+                jnp.reshape(done, (1,) * a.ndim) if a.ndim else done, b, a),
+            nstate, fresh)
+        obs = self.observe(nstate)
+        return nstate, obs, rew, done
+
+
+_REGISTRY: Dict[str, Callable[[], Env]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make(name: str) -> Env:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown env {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def env_names():
+    return sorted(_REGISTRY)

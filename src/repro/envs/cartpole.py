@@ -1,0 +1,72 @@
+"""CartPole swing-up (continuous torque) — a second easy-tier env.
+
+Classic cart-pole dynamics (Barto/Sutton parameters) but with continuous
+force and a swing-up objective: the pole starts hanging DOWN and the
+reward is cos(theta) minus position/velocity penalties. Sits between
+Pendulum and Reacher on the difficulty ladder (paper's HalfCheetah slot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvSpec, register
+
+
+@register("cartpole")
+class CartpoleSwingup(Env):
+    gravity = 9.8
+    m_cart = 1.0
+    m_pole = 0.1
+    length = 0.5          # half pole length
+    force_mag = 10.0
+    dt = 0.02
+    x_limit = 2.4
+
+    def __init__(self):
+        self.spec = EnvSpec("cartpole", obs_dim=5, act_dim=1,
+                            episode_len=500, difficulty=1)
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "x": jax.random.uniform(k1, (), minval=-0.1, maxval=0.1),
+            "xdot": jnp.zeros(()),
+            # hanging down (theta = pi), small noise
+            "th": jnp.pi + jax.random.uniform(k2, (), minval=-0.1,
+                                              maxval=0.1),
+            "thdot": jnp.zeros(()),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def observe(self, state):
+        return jnp.stack([state["x"], state["xdot"],
+                          jnp.cos(state["th"]), jnp.sin(state["th"]),
+                          state["thdot"]])
+
+    def step(self, state, action):
+        x, xdot = state["x"], state["xdot"]
+        th, thdot = state["th"], state["thdot"]
+        f = jnp.clip(action[0], -1.0, 1.0) * self.force_mag
+        total_m = self.m_cart + self.m_pole
+        pm_l = self.m_pole * self.length
+
+        sin, cos = jnp.sin(th), jnp.cos(th)
+        tmp = (f + pm_l * thdot ** 2 * sin) / total_m
+        thacc = (self.gravity * sin - cos * tmp) / (
+            self.length * (4.0 / 3.0 - self.m_pole * cos ** 2 / total_m))
+        xacc = tmp - pm_l * thacc * cos / total_m
+
+        x = jnp.clip(x + self.dt * xdot, -self.x_limit, self.x_limit)
+        xdot = xdot + self.dt * xacc
+        th = th + self.dt * thdot
+        thdot = thdot + self.dt * thacc
+        t = state["t"] + 1
+        state = {"x": x, "xdot": xdot, "th": th, "thdot": thdot, "t": t}
+
+        reward = (jnp.cos(th)                 # +1 upright, -1 hanging
+                  - 0.01 * x ** 2
+                  - 0.001 * thdot ** 2
+                  - 0.001 * f ** 2 / self.force_mag ** 2)
+        done = t >= self.spec.episode_len
+        return state, self.observe(state), reward, done

@@ -1,0 +1,71 @@
+"""Hopper2D-lite: planar single-leg locomotor with contact + posture terms.
+
+A hard exploration task standing in for the paper's Humanoid tier: forward
+progress requires a pumping gait (thrust while in contact, recovery in
+flight) and the episode terminates on a fall."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvSpec, register
+
+
+@register("hopper")
+class Hopper(Env):
+    dt = 0.02
+    gravity = 9.8
+    leg_rest = 1.0
+
+    def __init__(self):
+        self.spec = EnvSpec("hopper", obs_dim=8, act_dim=2,
+                            episode_len=400, difficulty=2)
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "x": jnp.zeros(()),
+            "vx": jax.random.uniform(k1, (), minval=-0.1, maxval=0.1),
+            "z": self.leg_rest + jax.random.uniform(k2, (), minval=0.0,
+                                                    maxval=0.05),
+            "vz": jnp.zeros(()),
+            "leg": jnp.zeros(()),          # leg extension (-0.5 .. 0.5)
+            "pitch": jnp.zeros(()),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def observe(self, state):
+        return jnp.stack([state["z"], state["vx"] * 0.3, state["vz"] * 0.3,
+                          state["leg"], state["pitch"],
+                          jnp.sin(state["pitch"]),
+                          jnp.clip(state["z"] - self.leg_rest, -1, 1),
+                          (state["t"] % 50) / 50.0])
+
+    def step(self, state, action):
+        u_leg = jnp.clip(action[0], -1.0, 1.0)       # leg thrust
+        u_hip = jnp.clip(action[1], -1.0, 1.0)       # hip / pitch control
+        z, vz, vx = state["z"], state["vz"], state["vx"]
+        leg = jnp.clip(state["leg"] + 2.0 * u_leg * self.dt, -0.5, 0.5)
+        foot = z - (self.leg_rest + leg)
+        contact = foot <= 0.0
+        # spring-like ground force when in contact, boosted by leg thrust
+        f_ground = jnp.where(contact, -80.0 * foot - 8.0 * vz
+                             + 30.0 * jnp.maximum(u_leg, 0.0), 0.0)
+        vz = vz + (f_ground - self.gravity) * self.dt
+        z = jnp.maximum(z + vz * self.dt, 0.3)
+        # forward thrust only while pushing off the ground, steered by hip
+        pitch = jnp.clip(state["pitch"] + 1.5 * u_hip * self.dt, -0.8, 0.8)
+        ax = jnp.where(contact, 12.0 * jnp.maximum(u_leg, 0.0)
+                       * jnp.sin(pitch) - 1.0 * vx, -0.2 * vx)
+        vx = jnp.clip(vx + ax * self.dt, -5.0, 10.0)
+        x = state["x"] + vx * self.dt
+        t = state["t"] + 1
+        new = {"x": x, "vx": vx, "z": z, "vz": vz, "leg": leg,
+               "pitch": pitch, "t": t}
+        fallen = (z < 0.55) | (jnp.abs(pitch) > 0.75)
+        reward = (1.0 * vx                        # forward progress
+                  + 0.5                           # alive bonus
+                  - 0.05 * (u_leg ** 2 + u_hip ** 2)
+                  - jnp.where(fallen, 5.0, 0.0))
+        done = fallen | (t >= self.spec.episode_len)
+        return new, self.observe(new), reward, done

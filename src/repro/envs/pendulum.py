@@ -1,0 +1,54 @@
+"""Pendulum-v0 with exact gym dynamics (the paper's 'simple' benchmark)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvSpec, register
+
+
+def _angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+@register("pendulum")
+class Pendulum(Env):
+    """Classic torque-limited pendulum swing-up (gym Pendulum-v0).
+
+    obs = (cos θ, sin θ, θ̇); reward = -(θ² + 0.1 θ̇² + 0.001 u²);
+    episode = 200 steps; solved ≈ return > -200 (paper Table 1 target)."""
+
+    max_speed = 8.0
+    max_torque = 2.0
+    dt = 0.05
+    g = 10.0
+    m = 1.0
+    length = 1.0
+
+    def __init__(self):
+        self.spec = EnvSpec("pendulum", obs_dim=3, act_dim=1,
+                            episode_len=200, difficulty=0)
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        return {"th": th, "thdot": thdot, "t": jnp.zeros((), jnp.int32)}
+
+    def observe(self, state):
+        return jnp.stack([jnp.cos(state["th"]), jnp.sin(state["th"]),
+                          state["thdot"]])
+
+    def step(self, state, action):
+        th, thdot = state["th"], state["thdot"]
+        u = jnp.clip(action[0], -1.0, 1.0) * self.max_torque
+        cost = (_angle_normalize(th) ** 2 + 0.1 * thdot ** 2
+                + 0.001 * u ** 2)
+        newthdot = thdot + (3 * self.g / (2 * self.length) * jnp.sin(th)
+                            + 3.0 / (self.m * self.length ** 2) * u) * self.dt
+        newthdot = jnp.clip(newthdot, -self.max_speed, self.max_speed)
+        newth = th + newthdot * self.dt
+        t = state["t"] + 1
+        state = {"th": newth, "thdot": newthdot, "t": t}
+        done = t >= self.spec.episode_len
+        return state, self.observe(state), -cost, done

@@ -1,0 +1,58 @@
+"""Reacher2: 2-link planar arm reaching a random target (medium difficulty).
+
+Analytic torque-driven dynamics with viscous damping — stands in for the
+paper's Walker2D tier (PyBullet is unavailable; DESIGN.md §2/§7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, EnvSpec, register
+
+
+@register("reacher")
+class Reacher(Env):
+    l1 = 0.5
+    l2 = 0.5
+    damping = 0.5
+    dt = 0.05
+    max_torque = 1.0
+
+    def __init__(self):
+        self.spec = EnvSpec("reacher", obs_dim=8, act_dim=2,
+                            episode_len=150, difficulty=1)
+
+    def reset(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.uniform(k1, (2,), minval=-jnp.pi, maxval=jnp.pi)
+        qd = jax.random.uniform(k2, (2,), minval=-0.5, maxval=0.5)
+        r = jax.random.uniform(k3, (), minval=0.3, maxval=0.9)
+        ang = jax.random.uniform(jax.random.fold_in(k3, 1), (),
+                                 minval=-jnp.pi, maxval=jnp.pi)
+        target = jnp.stack([r * jnp.cos(ang), r * jnp.sin(ang)])
+        return {"q": q, "qd": qd, "target": target,
+                "t": jnp.zeros((), jnp.int32)}
+
+    def _tip(self, q):
+        x = self.l1 * jnp.cos(q[0]) + self.l2 * jnp.cos(q[0] + q[1])
+        y = self.l1 * jnp.sin(q[0]) + self.l2 * jnp.sin(q[0] + q[1])
+        return jnp.stack([x, y])
+
+    def observe(self, state):
+        q, qd = state["q"], state["qd"]
+        tip = self._tip(q)
+        return jnp.concatenate([jnp.cos(q), jnp.sin(q), qd * 0.2,
+                                state["target"] - tip])
+
+    def step(self, state, action):
+        u = jnp.clip(action, -1.0, 1.0) * self.max_torque
+        q, qd = state["q"], state["qd"]
+        qdd = u - self.damping * qd          # unit-inertia simplification
+        qd = jnp.clip(qd + qdd * self.dt, -8.0, 8.0)
+        q = q + qd * self.dt
+        t = state["t"] + 1
+        new = dict(state, q=q, qd=qd, t=t)
+        dist = jnp.linalg.norm(self._tip(q) - state["target"])
+        reward = -dist - 0.01 * jnp.sum(u ** 2)
+        done = t >= self.spec.episode_len
+        return new, self.observe(new), reward, done

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot spots (+ jnp oracles in ref.py).
+
+flash_attention   blocked online-softmax GQA attention (prefill/train)
+decode_attention  flash-decode: 1 query vs long KV cache (decode shapes)
+ssd_scan          Mamba-2 SSD chunked scan (ssm/hybrid archs)
+rmsnorm           fused reduce+scale (memory-bound fusion)
+
+``ops`` holds the jit'd wrappers and the ``use_pallas`` switch; each
+kernel is validated against ``ref`` by shape/dtype sweeps in
+tests/test_kernels.py (interpret mode on CPU, Mosaic on TPU).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,68 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas(True)`` (or RunConfig.use_pallas) flips the model stack's
+attention / SSD / norm hot spots from the jnp oracle path to these
+kernels. On this CPU container they run in interpret mode; on TPU the
+same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd_scan as _ssd
+
+_USE_PALLAS: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "use_pallas", default=False)
+
+
+def pallas_enabled() -> bool:
+    return _USE_PALLAS.get()
+
+
+@contextlib.contextmanager
+def use_pallas(on: bool = True):
+    tok = _USE_PALLAS.set(on)
+    try:
+        yield
+    finally:
+        _USE_PALLAS.reset(tok)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """(B,Sq,H,d) x (B,Sk,KV,d)^2 -> (B,Sq,H,d)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, valid_len, *,
+                     block_k: int = 256) -> jax.Array:
+    """(B,H,d) x (B,S,KV,d)^2 -> (B,H,d)."""
+    return _dec.decode_attention(q, k_cache, v_cache, valid_len,
+                                 block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dtA, B_, C_, *, chunk: int = 64
+             ) -> Tuple[jax.Array, jax.Array]:
+    """(B,S,H,P) SSD forward -> (y, final_state)."""
+    return _ssd.ssd_scan(x, dtA, B_, C_, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256
+            ) -> jax.Array:
+    return _rms.rmsnorm(x, weight, eps=eps, block_rows=block_rows)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are deliberately the simplest possible formulations — no blocking,
+no online softmax — so the kernels' allclose sweeps test against math that
+is obviously right. They are also the XLA lowering path used by the
+dry-run when ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash_attention oracle: plain masked GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Sq, H, d); k/v: (B, Sk, KV, d) with H % KV == 0.
+    Returns (B, Sq, H, d). Positions are aligned to the sequence end
+    (q token i has absolute position Sk - Sq + i)."""
+    B, Sq, H, d = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, KV, G, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = (Sk - Sq) + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention oracle: one query vs a (partially valid) KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len) -> jax.Array:
+    """q: (B, H, d); caches: (B, S, KV, d); valid_len: scalar — slots
+    [0, valid_len) participate. Returns (B, H, d)."""
+    B, H, d = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) * d ** -0.5
+    mask = jnp.arange(S) < valid_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd (mamba-2) oracle: O(S^2) materialized-kernel form
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x, dtA, B_, C_, initial_state=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Quadratic SSD reference: y[t] = sum_{s<=t} C[t]·(prod decay)·B[s]·x[s].
+
+    x: (B, S, H, P) pre-scaled by dt; dtA: (B, S, H); B_, C_: (B, S, H, N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    xf, Bf, Cf = (t.astype(jnp.float32) for t in (x, B_, C_))
+    A = dtA.astype(jnp.float32)
+    cs = jnp.cumsum(A, axis=1)                         # (B,S,H)
+    # L[t,s] = exp(sum_{u=s+1..t} A[u]) for s<=t
+    seg = cs[:, :, None, :] - cs[:, None, :, :]        # (B,t,s,H)
+    tril = jnp.tril(jnp.ones((S, S), bool))
+    L = jnp.where(tril[None, :, :, None], jnp.exp(seg), 0.0)
+    G = jnp.einsum("bthn,bshn->btsh", Cf, Bf)          # C[t]·B[s]
+    y = jnp.einsum("btsh,btsh,bshp->bthp", G, L, xf)
+    if initial_state is not None:
+        s0 = initial_state.astype(jnp.float32)         # (B,H,P,N)
+        decay0 = jnp.exp(cs)                           # (B,S,H)
+        y = y + jnp.einsum("bthn,bth,bhpn->bthp", Cf, decay0, s0)
+    # final state
+    decay_f = jnp.exp(cs[:, -1:, :] - cs)              # (B,S,H)
+    fin = jnp.einsum("bshn,bsh,bshp->bhpn", Bf, decay_f, xf)
+    if initial_state is not None:
+        fin = fin + jnp.exp(cs[:, -1])[..., None, None].transpose(0, 1, 2, 3) \
+            * initial_state.astype(jnp.float32)
+    return y.astype(x.dtype), fin.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm oracle
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x, weight, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,138 @@
+"""Compiled-artifact analysis: collective bytes + roofline terms.
+
+The roofline (EXPERIMENTS.md §Roofline) is derived from the dry-run's
+compiled artifact, not from wall time (this container is CPU-only):
+
+  compute term    = HLO_FLOPs   / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes   / (chips x 819 GB/s HBM)
+  collective term = coll_bytes  / (chips x 50 GB/s ICI per link)
+
+``cost_analysis()`` reports the *per-partition* (per-device) module under
+GSPMD, so its flops/bytes are NOT divided by the chip count again; the
+collective bytes are parsed per-partition from the HLO text, so they are
+likewise per-chip. (Verified empirically in tests/test_analysis.py.)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO array type, e.g. bf16[16,256,960]{2,1,0}
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, per collective kind.
+
+    Result bytes ~ data received per device per op execution; ops inside
+    while loops (the layer scan) execute L times — the scan trip count is
+    applied by the caller via ``scan_multiplier`` when known.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result side: "%name = TYPE all-gather(...)" (also fusions wrapping)
+        m = re.match(r"%?[\w.\-]+ = (\(?[^)]*?\)?) ([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                op in _COLLECTIVES:
+            base = op
+            for c in _COLLECTIVES:
+                if op.startswith(c):
+                    base = c
+                    break
+            else:
+                continue
+            out[base] += _type_bytes(m.group(1))
+            out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Best-effort: largest while-loop trip count (the layer scan), used to
+    scale per-iteration collective bytes."""
+    best = 1
+    for m in re.finditer(r"trip_count=(\d+)", hlo_text):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    peak_memory_per_device: float = 0.0
+    notes: str = ""
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops_per_device / PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops / total_hlo_flops
+                             if total_hlo_flops else 0.0)
+        return self
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (forward-only), N = active params (MoE)."""
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

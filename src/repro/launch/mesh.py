@@ -1,0 +1,45 @@
+"""Production meshes for the dry-run (TPU v5e pods; host-CPU placeholders).
+
+A FUNCTION, not a module constant, so importing this never touches jax
+device state — the dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then calls ``make_production_mesh``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         data: int = 16, model: int = 16) -> Mesh:
+    """16x16 = 256 chips/pod ("data","model"); multi-pod adds the ``pod``
+    axis: (2,16,16) = 512 chips. The ``pod`` axis doubles as the Spreeze
+    actor/critic axis under ``spreeze_rules`` (DESIGN.md §2).
+
+    ``data``/``model`` reshape the intra-pod axes (data*model must stay
+    256) — the §Perf iterations use e.g. 32x8 for expert parallelism."""
+    assert data * model == 256, (data, model)
+    shape = (2, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 512 if multi_pod else 256
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for the production mesh, found "
+            f"{len(devs)}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Optional[Mesh]:
+    """Small mesh over however many devices exist (tests)."""
+    n = data * model
+    devs = jax.devices()
+    if len(devs) < n:
+        return None
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devs[:n])

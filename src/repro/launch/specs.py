@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct input specs + sharding trees for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct stand-ins for every
+model input of the (arch x input-shape) pair — no device allocation. The
+modality stubs live here: whisper gets (B, 1500, D) frame embeddings,
+paligemma (B, 256, D) patch embeddings (the sanctioned carve-out).
+
+Sharding policy (DESIGN.md §4), with divisibility guards so every arch
+lowers (head counts / frame counts that don't divide the mesh fall back
+to replication on that dim):
+
+  tokens (B, S)            -> (batch, seq)
+  frames/patches (B, P, D) -> (batch, seq?, None)
+  kv cache (L, B, S, kv, h)-> (None, batch, seq, None, None)
+  ssm state (L, B, H, P, N)-> (None, batch, tp?, None, None)
+  conv state (L, B, K, C)  -> (None, batch, None, tp?)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.data.tokens import text_len
+from repro.distributed.sharding import MeshRules, params_sharding_tree
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for a train/prefill forward of (cfg, shape)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    st = text_len(cfg, S)
+    specs = {"tokens": jax.ShapeDtypeStruct((B, st), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape,
+                       dtype=jnp.bfloat16) -> Tuple[Any, Any, Any]:
+    """(token, cache, cache_pos) stand-ins for one ``decode_step``."""
+    from repro.models import factory
+    B = shape.global_batch
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: factory.init_cache(cfg, B, shape.seq_len, dtype=dtype))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, pos
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _div(n: int, axis_size: int) -> bool:
+    return axis_size > 1 and n % axis_size == 0
+
+
+def batch_shardings(specs: Dict[str, Any], rules: MeshRules):
+    """tokens/frames/patches -> NamedSharding tree."""
+    bsz = rules.axis_size(rules.batch)
+    ssz = rules.axis_size(rules.seq)
+
+    def one(name: str, leaf):
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 1 and _div(leaf.shape[0], bsz):
+            dims[0] = rules.batch
+        if leaf.ndim >= 2 and _div(leaf.shape[1], ssz):
+            dims[1] = rules.seq
+        return NamedSharding(rules.mesh, P(*dims))
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def cache_shardings(cache, rules: MeshRules):
+    """KV-ring / SSM-state cache sharding by leaf name (see module doc)."""
+    bsz = rules.axis_size(rules.batch)
+    ssz = rules.axis_size(rules.seq)
+    tsz = rules.axis_size(rules.tp)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        dims = [None] * leaf.ndim
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, S_ring, kv, hd) or (n_inv, B, S_ring, kv, hd)
+            if _div(leaf.shape[1], bsz):
+                dims[1] = rules.batch
+            if _div(leaf.shape[2], ssz):
+                dims[2] = rules.seq
+        elif name == "ssm_state":
+            # (L, B, H, P, N): heads over tp when divisible
+            if _div(leaf.shape[1], bsz):
+                dims[1] = rules.batch
+            if _div(leaf.shape[2], tsz):
+                dims[2] = rules.tp
+        elif name == "conv_state":
+            # (L, B, K-1, C): channels over tp
+            if _div(leaf.shape[1], bsz):
+                dims[1] = rules.batch
+            if _div(leaf.shape[-1], tsz):
+                dims[-1] = rules.tp
+        else:
+            if leaf.ndim >= 2 and _div(leaf.shape[1], bsz):
+                dims[1] = rules.batch
+        return NamedSharding(rules.mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def train_state_shardings(params, opt_state, rules: MeshRules):
+    return (params_sharding_tree(params, rules),
+            params_sharding_tree(opt_state, rules))
+
+
+# ---------------------------------------------------------------------------
+# applicability (which decode shapes an arch runs)
+# ---------------------------------------------------------------------------
+
+def shape_supported(cfg: ModelConfig, shape: InputShape
+                    ) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic decode (DESIGN.md §3)."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return False, ("enc-dec decoder is spec'd to 448 tokens; a "
+                           "500k self-attn cache has no faithful meaning")
+        if not cfg.sub_quadratic:
+            return False, ("pure full-attention arch: 500k decode is "
+                           "quadratic-cost; no SWA variant claimed by "
+                           "the source")
+    return True, ""

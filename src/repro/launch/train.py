@@ -1,0 +1,111 @@
+"""Training launcher.
+
+Two modes, matching the framework's two tiers:
+
+* ``rl`` (the paper): Spreeze asynchronous SAC/TD3/DDPG on a pure-JAX env,
+  with auto hyperparameter adaptation (``--adapt``).
+* ``lm``: language-model pretraining driver for any assigned architecture
+  (``--reduced`` runs a CPU-sized same-family variant; full configs are
+  exercised via the dry-run).
+
+Examples:
+  python -m repro.launch.train rl --env pendulum --algo sac --seconds 120
+  python -m repro.launch.train rl --env pendulum --adapt
+  python -m repro.launch.train lm --arch smollm-360m --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    rl = sub.add_parser("rl")
+    rl.add_argument("--env", default="pendulum")
+    rl.add_argument("--algo", default="sac",
+                    choices=("sac", "td3", "ddpg"))
+    rl.add_argument("--seconds", type=float, default=60.0)
+    rl.add_argument("--target-return", type=float, default=None)
+    rl.add_argument("--num-envs", type=int, default=16)
+    rl.add_argument("--batch-size", type=int, default=8192)
+    rl.add_argument("--updates-per-round", type=int, default=4)
+    rl.add_argument("--transfer", default="shared",
+                    choices=("shared", "queue"))
+    rl.add_argument("--queue-size", type=int, default=20000)
+    rl.add_argument("--sync", action="store_true",
+                    help="partial-parallel baseline (paper Fig. 4a)")
+    rl.add_argument("--weight-sync", default="live",
+                    choices=("live", "ssd"))
+    rl.add_argument("--adapt", action="store_true",
+                    help="auto-tune batch size + num_envs first (paper §3.4)")
+    rl.add_argument("--seed", type=int, default=0)
+
+    lm = sub.add_parser("lm")
+    lm.add_argument("--arch", required=True)
+    lm.add_argument("--reduced", action="store_true")
+    lm.add_argument("--steps", type=int, default=100)
+    lm.add_argument("--batch", type=int, default=2)
+    lm.add_argument("--seq", type=int, default=128)
+    lm.add_argument("--lr", type=float, default=3e-4)
+
+    args = ap.parse_args(argv)
+
+    if args.mode == "rl":
+        from repro.core import SpreezeConfig, SpreezeTrainer, auto_tune
+        num_envs, batch_size = args.num_envs, args.batch_size
+        if args.adapt:
+            tuned = auto_tune(args.env, args.algo)
+            num_envs, batch_size = tuned["num_envs"], tuned["batch_size"]
+            print(f"[adapt] batch_size={batch_size} num_envs={num_envs}")
+        cfg = SpreezeConfig(
+            env_name=args.env, algo=args.algo, num_envs=num_envs,
+            batch_size=batch_size, updates_per_round=args.updates_per_round,
+            transfer=args.transfer, queue_size=args.queue_size,
+            sync_mode=args.sync, weight_sync=args.weight_sync,
+            seed=args.seed)
+        trainer = SpreezeTrainer(cfg)
+        hist = trainer.train(
+            max_seconds=args.seconds, target_return=args.target_return,
+            log_cb=lambda t, r, f, u: print(
+                f"  t={t:7.1f}s return={r:9.2f} frames={f} updates={u}",
+                flush=True))
+        print(json.dumps({
+            "sampling_hz": round(hist.sampling_hz, 1),
+            "update_hz": round(hist.update_hz, 2),
+            "update_frame_hz": round(hist.update_frame_hz, 1),
+            "solved_time_s": hist.solved_time,
+            "final_return": hist.eval_returns[-1] if hist.eval_returns
+            else None,
+            "transfer": hist.transfer_stats,
+        }, indent=2))
+        return 0
+
+    # lm mode
+    from repro.configs import get_config
+    from repro.configs.base import InputShape, RunConfig
+    from repro.data.tokens import batch_iterator
+    from repro.train.trainer import train_loop
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = InputShape("cli", seq_len=args.seq, global_batch=args.batch,
+                       kind="train")
+    rc = RunConfig(model=cfg, shape=shape, learning_rate=args.lr)
+    res = train_loop(rc, batch_iterator(cfg, shape), steps=args.steps,
+                     callback=lambda i, p, m: (
+                         print(f"  step {i:4d} loss {float(m['loss']):.4f}",
+                               flush=True) if i % 10 == 0 else None))
+    print(f"steps/sec {res.steps_per_sec:.3f}  "
+          f"final loss {res.losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

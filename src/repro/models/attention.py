@@ -1,0 +1,208 @@
+"""Context-parallel GQA attention.
+
+Sharding strategy (DESIGN.md §4): activations are sequence-sharded over the
+``model`` mesh axis; K/V are all-gathered over it. This keeps FLOPs exact for
+*any* head count (the assigned archs have 14/15/40-head configs that do not
+divide a 16-way model axis) at the cost of a per-layer KV all-gather that is
+accounted for in the roofline.
+
+Decode attention shards the KV cache *length* over the model axis and lets
+SPMD insert the distributed-softmax collectives (flash-decode style).
+
+``ops.flash_attention`` / ``ops.decode_attention`` in ``repro.kernels`` are
+the Pallas TPU execution paths for the same math (enabled via
+``use_pallas``); this module is the XLA lowering/oracle path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None,
+                   dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), in_axis=0, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, x_kv, cfg, dtype):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(dtype)
+    k = x_kv @ p["wk"].astype(dtype)
+    v = x_kv @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    B, Sq = x.shape[:2]
+    Sk = x_kv.shape[1]
+    return (q.reshape(B, Sq, h, hd), k.reshape(B, Sk, kv, hd),
+            v.reshape(B, Sk, kv, hd))
+
+
+def _gqa_scores_to_out(q, k, v, mask, cfg):
+    """q: (B,Sq,H,hd) seq-sharded; k,v: (B,Sk,KV,hd) replicated over seq axis.
+
+    Heads stay grouped (KV, G) so repeated KV is never materialized.
+    mask: broadcastable to (B, 1, 1, Sq, Sk) or None.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+    # (B, KV, G, Sq, Sk)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def make_mask(q_pos, k_pos, *, causal: bool, window: Optional[int] = None,
+              prefix_len: Optional[int] = None, k_valid=None):
+    """Boolean attention mask (..., Sq, Sk) from position vectors."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        c = qp >= kp
+        if prefix_len is not None:
+            c = c | (kp < prefix_len)
+        m = m & c
+    if window is not None:
+        m = m & (qp - kp < window)
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]
+    return m
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, causal: bool = True,
+              window: Optional[int] = None, prefix_len=None,
+              x_kv: Optional[jax.Array] = None, rope: bool = True,
+              dtype=jnp.bfloat16, return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: (B, Sq, D) sequence-sharded. x_kv: source for K/V (cross attention);
+    defaults to x. positions: (Sq,) global positions of the q tokens.
+    ``return_kv`` additionally returns the post-rope (k, v) for cache fill.
+    """
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, x_kv, cfg, dtype)
+    q = shard(q, "batch", "seq", None, None)
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+    # context parallelism: gather K/V over the sequence axis
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    from repro.kernels import ops
+    if ops.pallas_enabled() and prefix_len is None:
+        # TPU execution path: blocked online-softmax Pallas kernel
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        out = out.reshape(out.shape[:2] + (-1,))
+    else:
+        mask = None
+        if causal or window is not None:
+            k_pos = jnp.arange(k.shape[1])
+            mask = make_mask(positions, k_pos, causal=causal, window=window,
+                             prefix_len=prefix_len)[None, None, None]
+        out = _gqa_scores_to_out(q, k, v, mask, cfg)
+    out = shard(out, "batch", "seq", None)
+    out = out @ p["wo"].astype(dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def project_kv(p, memory, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Project an encoder memory to (K, V) for cross-attention caching."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    B, S = memory.shape[:2]
+    k = memory @ p["wk"].astype(dtype)
+    v = memory @ p["wv"].astype(dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return k.reshape(B, S, kv, hd), v.reshape(B, S, kv, hd)
+
+
+def to_ring(k: jax.Array, seq_len: int, ring_len: int) -> jax.Array:
+    """Pack the last ``ring_len`` tokens of (B,S,KV,hd) into ring layout
+    where token t sits at slot t % ring_len (decode continues seamlessly)."""
+    tail = k[:, -ring_len:]
+    if ring_len == k.shape[1] and seq_len == ring_len:
+        return tail
+    return jnp.roll(tail, shift=seq_len % ring_len, axis=1)
+
+
+def decode_attention(p, x, cache_k, cache_v, cache_pos, cfg: ModelConfig, *,
+                     window: Optional[int] = None, rope: bool = True,
+                     dtype=jnp.bfloat16,
+                     cross: bool = False, memory_len=None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a KV cache.
+
+    x: (B, 1, D). cache_k/v: (B, S_cache, KV, hd), cache length sharded over
+    the model axis ("seq"). cache_pos: scalar int32 — number of tokens
+    already in the cache (also the write slot, modulo ring size for SWA).
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    S_cache = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, x, cfg, dtype)
+    if rope and cfg.use_rope:
+        pos = jnp.asarray(cache_pos)[None]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    if not cross:
+        slot = cache_pos % S_cache if window is not None else cache_pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+        k_valid = jnp.arange(S_cache) <= cache_pos          # ring warm-up
+        valid_len = jnp.minimum(cache_pos + 1, S_cache)
+    else:
+        vl = memory_len if memory_len is not None else S_cache
+        k_valid = jnp.arange(S_cache) < vl
+        valid_len = jnp.asarray(vl)
+    from repro.kernels import ops
+    if ops.pallas_enabled():
+        # TPU execution path: flash-decode Pallas kernel
+        from repro.kernels.decode_attention import \
+            decode_attention as dec_kernel
+        out = dec_kernel(q[:, 0], cache_k, cache_v, valid_len)[:, None]
+        out = out.reshape(out.shape[:2] + (-1,))
+    else:
+        mask = k_valid[None, None, None, None, :]
+        out = _gqa_scores_to_out(q, cache_k, cache_v, mask, cfg)
+    out = out @ p["wo"].astype(dtype)
+    return out, cache_k, cache_v
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring-buffer length: full context, or the SWA window if smaller."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len

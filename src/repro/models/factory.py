@@ -1,0 +1,328 @@
+"""Model factory: init / train-forward / prefill / decode for every family.
+
+Public API (used by trainer, server, dry-run and the RL towers):
+
+  init_params(cfg, key)                  -> param pytree (f32)
+  loss_fn(params, batch, cfg)            -> (loss, metrics)
+  init_cache(cfg, batch, seq_len)        -> stacked cache pytree
+  prefill(params, batch, cfg, seq_len)   -> (cache, last_logits)
+  decode_step(params, token, cache, pos, cfg) -> (logits, new_cache)
+  count_params_analytic(cfg)             -> int
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import transformer as tf
+from repro.models.layers import cross_entropy, embed_init
+
+WHISPER_DEC_MAX_POS = 32768   # sized for the decode_32k shape
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe",
+            "ssm": "ssm", "hybrid": "ssm", "encdec": "dec"}[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": tf.init_norm(cfg),
+    }
+    kind = _layer_kind(cfg)
+    p["layers"] = tf.init_stack(ks[1], cfg, cfg.num_layers, kind=kind,
+                                dtype=dtype)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = tf.init_layer(ks[2], cfg, kind="dense",
+                                         dtype=dtype)
+    if cfg.family == "encdec":
+        p["enc_layers"] = tf.init_stack(ks[3], cfg, cfg.encoder_layers,
+                                        kind="enc", dtype=dtype)
+        p["enc_ln_f"] = tf.init_norm(cfg)
+        p["dec_pos"] = (jax.random.normal(
+            ks[4], (WHISPER_DEC_MAX_POS, cfg.d_model)) * 0.01).astype(dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(ks[5], cfg.vocab_size, cfg.d_model, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return shard(x, "batch", "seq", None)
+
+
+def _logits(params, x, cfg: ModelConfig, dtype):
+    x = tf.apply_norm(params["ln_f"], x, cfg)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = x @ table.astype(dtype).T
+    return shard(logits, "batch", "seq", None)
+
+
+def _sinusoid(S: int, D: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)],
+                           axis=-1).astype(dtype)
+
+
+def _encode(params, frames, cfg: ModelConfig, dtype, remat):
+    """Whisper encoder over stubbed (B, S_enc, D) frame embeddings."""
+    x = frames.astype(dtype) + _sinusoid(frames.shape[1], cfg.d_model, dtype)
+    pos = jnp.arange(frames.shape[1])
+    x, _ = tf.stack_forward(params["enc_layers"], x, cfg, kind="enc",
+                            positions=pos, dtype=dtype, remat=remat)
+    return tf.apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def _hybrid_groups(cfg: ModelConfig):
+    k = cfg.hybrid_attn_every
+    starts = list(range(0, cfg.num_layers, k))
+    return [(s, min(s + k, cfg.num_layers)) for s in starts]
+
+
+def _slice_layers(stacked, s, e):
+    return jax.tree.map(lambda a: a[s:e], stacked)
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            dtype=jnp.bfloat16, remat: bool = True
+            ) -> Tuple[jax.Array, jax.Array]:
+    """-> (logits (B,S,V), aux_loss). ``batch`` holds tokens (+frames/patches)."""
+    tokens = batch["tokens"]
+    kind = _layer_kind(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "encdec":
+        memory = _encode(params, batch["frames"], cfg, dtype, remat)
+        x = _embed(params, tokens, cfg, dtype)
+        x = x + params["dec_pos"][:tokens.shape[1]].astype(dtype)
+        pos = jnp.arange(tokens.shape[1])
+        x, aux = tf.stack_forward(params["layers"], x, cfg, kind="dec",
+                                  positions=pos, memory=memory, dtype=dtype,
+                                  remat=remat)
+        return _logits(params, x, cfg, dtype), aux
+
+    x = _embed(params, tokens, cfg, dtype)
+    prefix_len = None
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        x = shard(x, "batch", "seq", None)
+        prefix_len = cfg.num_patch_tokens
+    S = x.shape[1]
+    pos = jnp.arange(S)
+
+    if cfg.family == "hybrid":
+        for gi, (s, e) in enumerate(_hybrid_groups(cfg)):
+            x, _, _ = tf.layer_forward(params["shared_attn"], x, cfg,
+                                       kind="dense", positions=pos,
+                                       dtype=dtype)
+            x, _ = tf.stack_forward(_slice_layers(params["layers"], s, e),
+                                    x, cfg, kind="ssm", positions=pos,
+                                    dtype=dtype, remat=remat)
+    else:
+        x, aux = tf.stack_forward(params["layers"], x, cfg, kind=kind,
+                                  positions=pos, prefix_len=prefix_len,
+                                  dtype=dtype, remat=remat)
+    return _logits(params, x, cfg, dtype), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (+ MoE aux). Shift is done via roll+mask so the
+    sequence sharding is untouched."""
+    logits, aux = forward(params, batch, cfg, dtype=dtype, remat=remat)
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = (jnp.arange(S_text) < S_text - 1).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (B, S_text))
+    if cfg.family == "vlm":    # text logits sit after the patch prefix
+        P = cfg.num_patch_tokens
+        logits = jax.lax.dynamic_slice_in_dim(logits, P, S_text, axis=1)
+    ce = cross_entropy(logits, targets, mask)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    kind = _layer_kind(cfg)
+    if cfg.family == "hybrid":
+        core = tf.init_layer_cache(cfg, cfg.num_layers, batch, seq_len,
+                                   kind="ssm", dtype=dtype)
+        n_inv = len(_hybrid_groups(cfg))
+        ring = attn_lib.cache_len_for(cfg, seq_len)
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        shared = {
+            "k": jnp.zeros((n_inv, batch, ring, kv, hd), dtype),
+            "v": jnp.zeros((n_inv, batch, ring, kv, hd), dtype),
+        }
+        return {"core": core, "shared": shared}
+    mem = cfg.encoder_seq if cfg.family == "encdec" else 0
+    return tf.init_layer_cache(cfg, cfg.num_layers, batch, seq_len,
+                               kind=kind, dtype=dtype, memory_len=mem)
+
+
+def prefill(params, batch, cfg: ModelConfig, seq_len: int, *,
+            dtype=jnp.bfloat16) -> Tuple[Any, jax.Array]:
+    """Process a full prompt; returns (cache, logits of the final position)."""
+    tokens = batch["tokens"]
+    ring = attn_lib.cache_len_for(cfg, seq_len)
+    memory = None
+    prefix_len = None
+
+    if cfg.family == "encdec":
+        memory = _encode(params, batch["frames"], cfg, dtype, remat=False)
+        x = _embed(params, tokens, cfg, dtype)
+        x = x + params["dec_pos"][:tokens.shape[1]].astype(dtype)
+    else:
+        x = _embed(params, tokens, cfg, dtype)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+            x = shard(x, "batch", "seq", None)
+            prefix_len = cfg.num_patch_tokens
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    kind = _layer_kind(cfg)
+
+    if cfg.family == "hybrid":
+        core_caches, shared_caches = [], []
+        for gi, (s, e) in enumerate(_hybrid_groups(cfg)):
+            x, sc = tf.layer_prefill(params["shared_attn"], x, cfg,
+                                     kind="dense", positions=pos,
+                                     dtype=dtype, ring_len=ring, seq_len=S)
+            shared_caches.append(sc)
+            x, cc = tf.stack_prefill(_slice_layers(params["layers"], s, e),
+                                     x, cfg, kind="ssm", positions=pos,
+                                     dtype=dtype, ring_len=ring, seq_len=S)
+            core_caches.append(cc)
+        core = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *core_caches)
+        shared = jax.tree.map(lambda *a: jnp.stack(a, 0), *shared_caches)
+        cache = {"core": core, "shared": {"k": shared["k"], "v": shared["v"]}}
+    else:
+        x, cache = tf.stack_prefill(params["layers"], x, cfg, kind=kind,
+                                    positions=pos, prefix_len=prefix_len,
+                                    memory=memory, dtype=dtype,
+                                    ring_len=ring, seq_len=S)
+    logits = _logits(params, x[:, -1:], cfg, dtype)
+    return cache, logits
+
+
+def decode_step(params, token, cache, cache_pos, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16) -> Tuple[jax.Array, Any]:
+    """One decode step. token: (B,1) int32; cache_pos: scalar int32 =
+    number of tokens already consumed (absolute position of this token)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][cache_pos][None, None].astype(dtype)
+        x, new_cache = tf.stack_decode(params["layers"], x, cache, cache_pos,
+                                       cfg, kind="dec",
+                                       memory_len=cfg.encoder_seq,
+                                       dtype=dtype)
+        return _logits(params, x, cfg, dtype), new_cache
+
+    if cfg.family == "hybrid":
+        new_core, new_shared_k, new_shared_v = [], [], []
+        for gi, (s, e) in enumerate(_hybrid_groups(cfg)):
+            sc = {"k": cache["shared"]["k"][gi], "v": cache["shared"]["v"][gi]}
+            x, nsc = tf.layer_decode(params["shared_attn"], x, sc, cache_pos,
+                                     cfg, kind="dense", dtype=dtype)
+            new_shared_k.append(nsc["k"])
+            new_shared_v.append(nsc["v"])
+            x, ncc = tf.stack_decode(
+                _slice_layers(params["layers"], s, e), x,
+                _slice_layers(cache["core"], s, e), cache_pos, cfg,
+                kind="ssm", dtype=dtype)
+            new_core.append(ncc)
+        cache = {
+            "core": jax.tree.map(lambda *a: jnp.concatenate(a, 0), *new_core),
+            "shared": {"k": jnp.stack(new_shared_k, 0),
+                       "v": jnp.stack(new_shared_v, 0)},
+        }
+        return _logits(params, x, cfg, dtype), cache
+
+    kind = _layer_kind(cfg)
+    x, new_cache = tf.stack_decode(params["layers"], x, cache, cache_pos,
+                                   cfg, kind=kind, dtype=dtype)
+    return _logits(params, x, cfg, dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ModelConfig, d: Optional[int] = None) -> int:
+    d = d or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    n = d * h * hd + 2 * d * kv * hd + h * hd * d
+    if cfg.qkv_bias:
+        n += h * hd + 2 * kv * hd
+    return n
+
+
+def _norm_params(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model if cfg.family == "encdec" else cfg.d_model
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    from repro.models.ssm import ssm_dims
+    d_inner, H, conv_ch, d_in_proj = ssm_dims(cfg)
+    return (cfg.d_model * d_in_proj + cfg.ssm.conv_dim * conv_ch + conv_ch
+            + 3 * H + d_inner + d_inner * cfg.d_model)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    D, V = cfg.d_model, cfg.vocab_size
+    total = V * D + (_norm_params(cfg))
+    if not cfg.tie_embeddings:
+        total += V * D
+
+    if cfg.family in ("dense", "vlm"):
+        per = _attn_params(cfg) + 2 * _norm_params(cfg) + 3 * D * cfg.d_ff
+        total += cfg.num_layers * per
+    elif cfg.family == "moe":
+        m = cfg.moe
+        e = m.experts_per_token if active_only else m.num_experts
+        per = (_attn_params(cfg) + 2 * _norm_params(cfg) + D * m.num_experts
+               + 3 * e * D * m.expert_d_ff
+               + 3 * m.num_shared_experts * D * m.expert_d_ff)
+        total += cfg.num_layers * per
+    elif cfg.family == "ssm":
+        total += cfg.num_layers * (_ssm_params(cfg) + _norm_params(cfg))
+    elif cfg.family == "hybrid":
+        total += cfg.num_layers * (_ssm_params(cfg) + _norm_params(cfg))
+        total += _attn_params(cfg) + 2 * _norm_params(cfg) + 3 * D * cfg.d_ff
+    elif cfg.family == "encdec":
+        enc_mlp = 2 * D * cfg.d_ff + cfg.d_ff + D
+        enc_per = _attn_params(cfg) + 2 * _norm_params(cfg) + enc_mlp
+        dec_per = 2 * _attn_params(cfg) + 3 * _norm_params(cfg) + enc_mlp
+        total += (cfg.encoder_layers * enc_per + cfg.num_layers * dec_per
+                  + _norm_params(cfg) + WHISPER_DEC_MAX_POS * D)
+    return total

@@ -1,0 +1,123 @@
+"""Shared layer primitives: init helpers, norms, rotary, SwiGLU MLP.
+
+Params are plain nested dicts of jnp arrays (no flax); compute runs in
+``cfg``-selected dtype (bf16 default) with norms/softmax in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32, scale=1.0):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    if not isinstance(in_axis, int):
+        for a in in_axis:
+            fan_in *= shape[a]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float):
+    from repro.kernels import ops
+    if ops.pallas_enabled():
+        from repro.kernels.rmsnorm import rmsnorm
+        return rmsnorm(x, weight, eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rms_norm(x, z, weight, eps: float):
+    """Mamba-2 output norm: rmsnorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU, llama-style)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(p, x, compute_dtype):
+    w_gate = p["w_gate"].astype(compute_dtype)
+    w_up = p["w_up"].astype(compute_dtype)
+    w_down = p["w_down"].astype(compute_dtype)
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", "seq", None)
+    return h @ w_down
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    """Whisper-style 2-matrix GELU MLP (with biases)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype=dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x, compute_dtype):
+    h = jax.nn.gelu(x @ p["w_in"].astype(compute_dtype)
+                    + p["b_in"].astype(compute_dtype))
+    h = shard(h, "batch", "seq", None)
+    return h @ p["w_out"].astype(compute_dtype) + p["b_out"].astype(compute_dtype)
+
+
+def cross_entropy(logits, targets, mask: Optional[jax.Array] = None):
+    """Mean next-token CE in f32. logits (B,S,V), targets (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

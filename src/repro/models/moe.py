@@ -1,0 +1,158 @@
+"""Mixture-of-Experts with capacity-factor einsum dispatch (GSPMD-style).
+
+Tokens are grouped as (B, NG, T, D) where the NG group dim aligns with the
+sequence sharding; dispatch/combine one-hot einsums move tokens from
+(seq-sharded groups) to (expert-sharded slots) so the SPMD partitioner
+emits all-to-alls — classic expert parallelism.
+
+Expert placement: when the expert count divides the model axis (kimi-k2:
+384/16) the expert dim is sharded over it; otherwise (mixtral: 8 experts)
+each expert's ``d_ff`` is tensor-sharded instead.
+
+Compute cost is E*C token-slots per group ≈ ``capacity_factor`` × the
+active-token ideal; tokens beyond capacity are dropped to the residual
+(standard dropping MoE).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_rules, shard
+from repro.models.layers import dense_init
+
+MAX_GROUP_T = 256    # capacity-accounting group size (tokens); the
+                     # dispatch/combine one-hot bytes scale with T
+                     # (B·S·k·cf·C-slots), so smaller groups cut the
+                     # routing-tensor traffic (EXPERIMENTS §Perf it.4)
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),  # f32 router
+        "moe_w_gate": dense_init(ks[1], (e, d, f), in_axis=1, dtype=dtype),
+        "moe_w_up": dense_init(ks[2], (e, d, f), in_axis=1, dtype=dtype),
+        "moe_w_down": dense_init(ks[3], (e, f, d), in_axis=1, dtype=dtype),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared_w_gate"] = dense_init(k1, (d, fs), dtype=dtype)
+        p["shared_w_up"] = dense_init(k2, (d, fs), dtype=dtype)
+        p["shared_w_down"] = dense_init(k3, (fs, d), dtype=dtype)
+    return p
+
+
+def _group_len(S: int) -> int:
+    """Pick T so the group dim NG=S/T is a multiple of the seq-shard count."""
+    r = current_rules()
+    ns = r.axis_size(r.seq) if r.active else 1
+    if S % ns:
+        ns = 1
+    ng = ns
+    while S // ng > MAX_GROUP_T:
+        ng *= 2
+        if S % ng:
+            ng //= 2
+            break
+    return max(1, S // ng)
+
+
+def _routing(logits, top_k: int, capacity: int):
+    """logits: (B, NG, T, E) f32 -> dispatch/combine (B,NG,T,E,C) + aux."""
+    *_, T, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (...,T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot_e = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (...,T,k,E)
+    lead = onehot_e.shape[:-3]
+    flat = onehot_e.reshape(lead + (T * top_k, E))
+    pos = jnp.cumsum(flat, axis=-2) - flat
+    pos = pos.reshape(lead + (T, top_k, E))
+    pos_in_expert = jnp.sum(pos * onehot_e, axis=-1).astype(jnp.int32)
+    keep = (pos_in_expert < capacity).astype(jnp.float32)
+    onehot_c = jax.nn.one_hot(pos_in_expert, capacity,
+                              dtype=jnp.float32) * keep[..., None]
+    # the (T, E, C) routing tensors are the largest MoE intermediates
+    # (B·S·k·cf slots x 4 bytes); bf16 halves their traffic and the
+    # gate values they carry tolerate it (softmax outputs in [0,1])
+    combine = jnp.einsum("...tke,...tkc->...tec",
+                         (onehot_e * gate_vals[..., None]).astype(
+                             jnp.bfloat16),
+                         onehot_c.astype(jnp.bfloat16))
+    # dispatch is a pure indicator tensor: its cotangent is meaningless
+    # (router gradients flow through `combine`); stopping it removes an
+    # O(tokens x E x C x D) product from the backward pass.
+    dispatch = jax.lax.stop_gradient(
+        jnp.einsum("...tke,...tkc->...tec",
+                   onehot_e.astype(jnp.bfloat16),
+                   onehot_c.astype(jnp.bfloat16)))
+
+    density = jnp.mean(onehot_e.sum(-2), axis=-2)             # (...,E)
+    mean_prob = jnp.mean(probs, axis=-2)
+    lb_loss = E * jnp.mean(jnp.sum(density * mean_prob, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return dispatch, combine, lb_loss, z_loss
+
+
+def moe_block(p, x, cfg: ModelConfig, dtype=jnp.bfloat16
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    r = current_rules()
+    B, S, D = x.shape
+    decode = S == 1
+    if decode:                       # group across the batch dim
+        xg = x.reshape(1, 1, B, D)
+        t_spec, g_spec = "batch", None
+        T = B
+    else:
+        T = _group_len(S)
+        xg = x.reshape(B, S // T, T, D)
+        t_spec, g_spec = None, "seq"
+        xg = shard(xg, "batch", g_spec, t_spec, None)
+    capacity = max(1, -(-T * m.experts_per_token * int(
+        8 * m.capacity_factor) // (m.num_experts * 8)))
+
+    e_div = (not r.active) or m.num_experts % max(
+        1, r.axis_size(r.tp)) == 0
+    e_spec = "tp" if (r.active and m.num_experts % r.axis_size(r.tp) == 0) \
+        else None
+    f_spec = None if e_spec else "tp"
+
+    # keep the router matmul in the compute dtype: promoting xg to f32
+    # here doubles the bytes of any resharding XLA inserts around the
+    # dispatch einsums; the f32 softmax/top-k happens on the tiny logits
+    logits = (xg @ p["router"].astype(dtype)).astype(jnp.float32)
+    dispatch, combine, lb, zl = _routing(logits, m.experts_per_token, capacity)
+    dispatch = dispatch.astype(dtype)
+
+    bspec = None if decode else "batch"
+    xe = jnp.einsum("bgtd,bgtec->bgecd", xg, dispatch)        # (B,NG,E,C,D)
+    xe = shard(xe, bspec, None, e_spec, None, None)           # all-to-all in
+    wg = p["moe_w_gate"].astype(dtype)
+    wu = p["moe_w_up"].astype(dtype)
+    wd = p["moe_w_down"].astype(dtype)
+    h = jax.nn.silu(jnp.einsum("bgecd,edf->bgecf", xe, wg)) \
+        * jnp.einsum("bgecd,edf->bgecf", xe, wu)
+    h = shard(h, bspec, None, e_spec, None, f_spec)
+    ye = jnp.einsum("bgecf,efd->bgecd", h, wd)
+    ye = shard(ye, bspec, None, e_spec, None, None)
+    y = jnp.einsum("bgecd,bgtec->bgtd", ye, combine.astype(dtype))
+    y = shard(y, bspec, g_spec, t_spec, None)                 # all-to-all out
+
+    if m.num_shared_experts:
+        hs = jax.nn.silu(xg @ p["shared_w_gate"].astype(dtype)) \
+            * (xg @ p["shared_w_up"].astype(dtype))
+        y = y + hs @ p["shared_w_down"].astype(dtype)
+
+    aux = m.load_balance_loss * lb + m.router_z_loss * zl
+    return y.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,229 @@
+"""Mamba-2 (state-space duality) block, pure-JAX chunked implementation.
+
+The intra-chunk term is dense matmuls (MXU-friendly; the Pallas ``ssd_scan``
+kernel implements the same tiling for TPU); the inter-chunk linear
+recurrence uses ``lax.associative_scan`` so a sequence sharded over the
+model axis parallelizes with log-depth collective steps — the TPU-native
+replacement for a sequential selective-scan (DESIGN.md §4/§5).
+
+Shapes follow the paper's minimal reference: heads H = d_inner / P,
+state N, groups G (=1 for the assigned configs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, gated_rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.state_dim + heads
+    return d_inner, heads, conv_ch, d_in_proj
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_ch, d_in_proj = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[2], (H,))
+    dt = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, d_in_proj), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, conv_ch), in_axis=0,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (H,), minval=1.0,
+                                            maxval=16.0)),
+        "D_skip": jnp.ones((H,)),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 7),
+                               (d_inner, cfg.d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    K, C = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],
+        window_strides=(1,), padding=[(K - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return out + b
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L); out[i,j] = sum_{k=j+1..i} x[k], -inf j>i."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B_, C_, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """State-space-duality forward.
+
+    x:   (B, S, H, P) — inputs already scaled by dt
+    dtA: (B, S, H)    — dt * A (negative)
+    B_, C_: (B, S, H, N) — per-head input/output projections (groups
+            pre-broadcast to heads)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc, L = S // chunk, chunk
+
+    def to_chunks(t):
+        return t.reshape((Bb, nc, L) + t.shape[2:])
+
+    xc, Bc, Cc = map(to_chunks, (x, B_, C_))            # (B,nc,L,H,·)
+    Ac = to_chunks(dtA).astype(jnp.float32)             # (B,nc,L,H)
+    Ac = jnp.moveaxis(Ac, -1, 1)                        # (B,H,nc,L)
+    A_cum = jnp.cumsum(Ac, axis=-1)
+
+    # intra-chunk (dense, MXU-friendly)
+    Lmat = jnp.exp(_segsum(Ac)).astype(x.dtype)         # (B,H,nc,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xc)
+
+    # per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum).astype(x.dtype)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk linear recurrence — associative scan over the chunk dim
+    chunk_decay = jnp.exp(A_cum[..., -1])               # (B,H,nc) f32
+    cd = jnp.moveaxis(chunk_decay, -1, 1)[..., None, None]  # (B,nc,H,1,1)
+    sf32 = states.astype(jnp.float32)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sb + db * sa
+
+    _, s_incl = jax.lax.associative_scan(combine, (cd, sf32), axis=1)
+    init = (jnp.zeros_like(sf32[:, :1]) if initial_state is None
+            else initial_state[:, None].astype(jnp.float32))
+    states_prev = jnp.concatenate([init, s_incl[:, :-1]], axis=1)
+    final_state = s_incl[:, -1]                         # (B,H,P,N)
+
+    # inter-chunk contribution
+    out_decay = jnp.exp(A_cum).astype(x.dtype)          # (B,H,nc,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc,
+                       states_prev.astype(x.dtype), out_decay)
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, final_state.astype(x.dtype)
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt, d_inner, H, s
+
+
+def _split_xbc(xBC, cfg, d_inner, H):
+    s = cfg.ssm
+    gn = s.ngroups * s.state_dim
+    x_in = xBC[..., :d_inner]
+    B_ = xBC[..., d_inner:d_inner + gn]
+    C_ = xBC[..., d_inner + gn:]
+    lead = xBC.shape[:-1]
+    x_in = x_in.reshape(lead + (H, s.head_dim))
+    B_ = B_.reshape(lead + (s.ngroups, s.state_dim))
+    C_ = C_.reshape(lead + (s.ngroups, s.state_dim))
+    # broadcast groups to heads
+    rep = H // s.ngroups
+    B_ = jnp.repeat(B_, rep, axis=-2)
+    C_ = jnp.repeat(C_, rep, axis=-2)
+    return x_in, B_, C_
+
+
+def ssm_block(p, x, cfg: ModelConfig, dtype=jnp.bfloat16,
+              initial_state: Optional[jax.Array] = None,
+              return_cache: bool = False):
+    """Full-sequence Mamba-2 block. x: (B,S,D) -> (out, final_ssm_state)
+    or (out, cache_dict) when ``return_cache`` (for prefill)."""
+    B, S, D = x.shape
+    zxbcdt = x @ p["in_proj"].astype(dtype)
+    z, xBC_raw, dt, d_inner, H, s = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"].astype(dtype),
+                                   p["conv_b"].astype(dtype)))
+    xBC = shard(xBC, "batch", "seq", None)
+    x_in, B_, C_ = _split_xbc(xBC, cfg, d_inner, H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    from repro.kernels import ops
+    if ops.pallas_enabled() and initial_state is None \
+            and S % min(s.chunk_size, S) == 0:
+        # TPU execution path: Pallas SSD chunked-scan kernel
+        from repro.kernels.ssd_scan import ssd_scan
+        y, fstate = ssd_scan(x_in * dt[..., None].astype(dtype),
+                             (dt * A).astype(jnp.float32), B_, C_,
+                             chunk=min(s.chunk_size, S))
+    else:
+        y, fstate = ssd_chunked((x_in * dt[..., None].astype(dtype)),
+                                dt * A, B_, C_, min(s.chunk_size, S),
+                                initial_state)
+    y = y + p["D_skip"].astype(dtype)[None, None, :, None] * x_in
+    y = y.reshape(B, S, d_inner)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    y = shard(y, "batch", "seq", None)
+    out = y @ p["out_proj"].astype(dtype)
+    if return_cache:
+        cache = {"ssm_state": fstate,
+                 "conv_state": xBC_raw[:, -(s.conv_dim - 1):]}
+        return out, cache
+    return out, fstate
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, H, conv_ch, _ = ssm_dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, H, s.head_dim, s.state_dim), dtype),
+        "conv_state": jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(p, x, cache, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Single-token recurrent step. x: (B,1,D) -> (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    zxbcdt = x @ p["in_proj"].astype(dtype)
+    z, xBC, dt, d_inner, H, s = _split_proj(zxbcdt, cfg)
+    # depthwise conv over the ring of the last conv_dim inputs
+    window = jnp.concatenate([cache["conv_state"], xBC], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dtype)) \
+        + p["conv_b"].astype(dtype)
+    new_conv_state = window[:, 1:]
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    x_in, B_, C_ = _split_xbc(xBC, cfg, d_inner, H)     # (B,1,H,·)
+    x_in, B_, C_ = x_in[:, 0], B_[:, 0], C_[:, 0]       # (B,H,·)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A).astype(dtype)                  # (B,H)
+    x_dt = x_in * dt[..., None].astype(dtype)
+    state = cache["ssm_state"] * dA[..., None, None] \
+        + jnp.einsum("bhn,bhp->bhpn", B_, x_dt)
+    y = jnp.einsum("bhn,bhpn->bhp", C_, state) \
+        + p["D_skip"].astype(dtype)[None, :, None] * x_in
+    y = y.reshape(B, 1, d_inner)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dtype)
+    return out, {"ssm_state": state, "conv_state": new_conv_state}

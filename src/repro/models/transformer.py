@@ -1,0 +1,293 @@
+"""Transformer blocks and scan-over-layers stacks for every family.
+
+All stacks are ``lax.scan`` over stacked per-layer params so HLO size (and
+dry-run compile time with 512 host devices) is depth-independent. Optional
+``jax.checkpoint`` wraps the scan body for activation rematerialization.
+
+Families:
+  dense / vlm      pre-norm GQA attention + SwiGLU MLP (llama-style)
+  moe              attention + capacity-factor MoE (mixtral / kimi-k2)
+  encdec           whisper-style LayerNorm blocks, enc self-attn / dec
+                   self+cross-attn + GELU MLP
+  ssm              mamba2 SSD blocks
+  hybrid           zamba2: mamba2 core + one *shared-weight* attention block
+                   invoked every ``hybrid_attn_every`` core layers
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (gelu_mlp, init_gelu_mlp, init_mlp,
+                                 layer_norm, mlp, rms_norm)
+
+
+# The dry-run's cost probes unroll the layer scans so XLA cost analysis
+# counts every iteration (a while body is otherwise counted once).
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    tok = _UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def _scan_unroll() -> bool:
+    return _UNROLL.get()
+
+
+def _use_ln(cfg: ModelConfig) -> bool:
+    return cfg.family == "encdec"     # whisper uses LayerNorm w/ bias
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if _use_ln(cfg):
+        return {"w": jnp.ones((d,)), "b": jnp.zeros((d,))}
+    return {"w": jnp.ones((d,))}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, *, kind: str, dtype=jnp.float32):
+    """kind: dense | moe | enc | dec | ssm"""
+    ks = jax.random.split(key, 6)
+    if kind == "ssm":
+        return {"ln1": init_norm(cfg), "ssm": ssm_lib.init_ssm(ks[0], cfg,
+                                                               dtype=dtype)}
+    p = {"ln1": init_norm(cfg),
+         "attn": attn_lib.init_attention(ks[0], cfg, dtype=dtype),
+         "ln2": init_norm(cfg)}
+    if kind == "dense":
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype)
+    elif kind == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype=dtype)
+    elif kind == "enc":
+        p["mlp"] = init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype)
+    elif kind == "dec":
+        p["xattn"] = attn_lib.init_attention(ks[2], cfg, dtype=dtype)
+        p["ln3"] = init_norm(cfg)
+        p["mlp"] = init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_stack(key, cfg: ModelConfig, n_layers: int, *, kind: str,
+               dtype=jnp.float32):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_layer(k, cfg, kind=kind, dtype=dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def layer_forward(p, x, cfg: ModelConfig, *, kind: str, positions,
+                  prefix_len=None, memory=None, dtype=jnp.bfloat16,
+                  ssm_state=None) -> Tuple[jax.Array, jax.Array, Any]:
+    """Returns (x, aux_loss, extra) — extra is the SSM final state if any."""
+    aux = jnp.zeros((), jnp.float32)
+    extra = None
+    if kind == "ssm":
+        h, extra = ssm_lib.ssm_block(p["ssm"], apply_norm(p["ln1"], x, cfg),
+                                     cfg, dtype=dtype,
+                                     initial_state=ssm_state)
+        return x + h, aux, extra
+
+    causal = kind != "enc"
+    h = attn_lib.attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg), cfg, positions=positions,
+        causal=causal, window=cfg.sliding_window if causal else None,
+        prefix_len=prefix_len, dtype=dtype)
+    x = x + h
+    if kind == "dec":
+        h = attn_lib.attention(
+            p["xattn"], apply_norm(p["ln2"], x, cfg), cfg,
+            positions=positions, causal=False, x_kv=memory, rope=False,
+            dtype=dtype)
+        x = x + h
+        x = x + gelu_mlp(p["mlp"], apply_norm(p["ln3"], x, cfg), dtype)
+        return x, aux, extra
+    y = apply_norm(p["ln2"], x, cfg)
+    if kind == "moe":
+        h, aux = moe_lib.moe_block(p["moe"], y, cfg, dtype=dtype)
+    elif kind == "enc":
+        h = gelu_mlp(p["mlp"], y, dtype)
+    else:
+        h = mlp(p["mlp"], y, dtype)
+    return x + h, aux, extra
+
+
+def stack_forward(stacked, x, cfg: ModelConfig, *, kind: str, positions,
+                  prefix_len=None, memory=None, dtype=jnp.bfloat16,
+                  remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """scan over layers. Returns (x, total_aux_loss)."""
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h = shard(h, "batch", "seq", None)
+        h, a, _ = layer_forward(layer_p, h, cfg, kind=kind,
+                                positions=positions, prefix_len=prefix_len,
+                                memory=memory, dtype=dtype)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked,
+                               unroll=_scan_unroll())
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also emits per-layer caches
+# ---------------------------------------------------------------------------
+
+def layer_prefill(p, x, cfg: ModelConfig, *, kind: str, positions,
+                  prefix_len=None, memory=None, dtype=jnp.bfloat16,
+                  ring_len: int, seq_len: int):
+    """Like layer_forward but returns (x, layer_cache)."""
+    if kind == "ssm":
+        h, cache = ssm_lib.ssm_block(p["ssm"], apply_norm(p["ln1"], x, cfg),
+                                     cfg, dtype=dtype, return_cache=True)
+        return x + h, cache
+
+    causal = kind != "enc"
+    h, (k, v) = attn_lib.attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg), cfg, positions=positions,
+        causal=causal, window=cfg.sliding_window if causal else None,
+        prefix_len=prefix_len, dtype=dtype, return_kv=True)
+    x = x + h
+    cache = {"k": attn_lib.to_ring(k, seq_len, ring_len),
+             "v": attn_lib.to_ring(v, seq_len, ring_len)}
+    if kind == "dec":
+        h = attn_lib.attention(
+            p["xattn"], apply_norm(p["ln2"], x, cfg), cfg,
+            positions=positions, causal=False, x_kv=memory, rope=False,
+            dtype=dtype)
+        x = x + h
+        cache["xk"], cache["xv"] = attn_lib.project_kv(p["xattn"], memory,
+                                                       cfg, dtype)
+        x = x + gelu_mlp(p["mlp"], apply_norm(p["ln3"], x, cfg), dtype)
+        return x, cache
+    y = apply_norm(p["ln2"], x, cfg)
+    if kind == "moe":
+        h, _ = moe_lib.moe_block(p["moe"], y, cfg, dtype=dtype)
+    else:
+        h = mlp(p["mlp"], y, dtype)
+    return x + h, cache
+
+
+def stack_prefill(stacked, x, cfg: ModelConfig, *, kind: str, positions,
+                  prefix_len=None, memory=None, dtype=jnp.bfloat16,
+                  ring_len: int, seq_len: int):
+    """scan over layers, emitting the stacked (L, ...) cache pytree."""
+
+    def body(h, layer_p):
+        h = shard(h, "batch", "seq", None)
+        h, cache = layer_prefill(layer_p, h, cfg, kind=kind,
+                                 positions=positions, prefix_len=prefix_len,
+                                 memory=memory, dtype=dtype,
+                                 ring_len=ring_len, seq_len=seq_len)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, stacked, unroll=_scan_unroll())
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode (one token, cache)
+# ---------------------------------------------------------------------------
+
+def layer_decode(p, x, cache, cache_pos, cfg: ModelConfig, *, kind: str,
+                 memory_len=None, dtype=jnp.bfloat16):
+    """x: (B,1,D). cache: dict of this layer's state. Returns (x, new_cache)."""
+    if kind == "ssm":
+        h, new = ssm_lib.ssm_decode_step(
+            p["ssm"], apply_norm(p["ln1"], x, cfg), cache, cfg, dtype=dtype)
+        return x + h, new
+
+    h, nk, nv = attn_lib.decode_attention(
+        p["attn"], apply_norm(p["ln1"], x, cfg), cache["k"], cache["v"],
+        cache_pos, cfg, window=cfg.sliding_window, dtype=dtype)
+    x = x + h
+    new = dict(cache, k=nk, v=nv)
+    if kind == "dec":
+        h, _, _ = attn_lib.decode_attention(
+            p["xattn"], apply_norm(p["ln2"], x, cfg), cache["xk"],
+            cache["xv"], cache_pos, cfg, rope=False, dtype=dtype,
+            cross=True, memory_len=memory_len)
+        x = x + h
+        x = x + gelu_mlp(p["mlp"], apply_norm(p["ln3"], x, cfg), dtype)
+        return x, new
+    y = apply_norm(p["ln2"], x, cfg)
+    if kind == "moe":
+        h, _ = moe_lib.moe_block(p["moe"], y, cfg, dtype=dtype)
+    elif kind == "enc":
+        h = gelu_mlp(p["mlp"], y, dtype)
+    else:
+        h = mlp(p["mlp"], y, dtype)
+    return x + h, new
+
+
+def stack_decode(stacked, x, caches, cache_pos, cfg: ModelConfig, *,
+                 kind: str, memory_len=None, dtype=jnp.bfloat16):
+    """scan over (layer params, layer cache); returns (x, new caches)."""
+
+    def body(h, inp):
+        layer_p, layer_cache = inp
+        h, new_cache = layer_decode(layer_p, h, layer_cache, cache_pos, cfg,
+                                    kind=kind, memory_len=memory_len,
+                                    dtype=dtype)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches),
+                                 unroll=_scan_unroll())
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, n_layers: int, batch: int,
+                     seq_len: int, *, kind: str, dtype=jnp.bfloat16,
+                     memory_len: int = 0):
+    """Stacked (L, ...) cache pytree for ``stack_decode``."""
+    if kind == "ssm":
+        one = ssm_lib.init_ssm_cache(cfg, batch, dtype=dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_layers,) + a.shape, a.dtype), one)
+    S = attn_lib.cache_len_for(cfg, seq_len)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    c = {
+        "k": jnp.zeros((n_layers, batch, S, kv, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, S, kv, hd), dtype),
+    }
+    if kind == "dec":
+        c["xk"] = jnp.zeros((n_layers, batch, memory_len, kv, hd), dtype)
+        c["xv"] = jnp.zeros((n_layers, batch, memory_len, kv, hd), dtype)
+    return c

@@ -1,0 +1,7 @@
+"""Replay: device-resident shared-memory buffer + host-queue baseline."""
+from repro.replay.buffer import (ReplayState, add_batch, add_batch_jit,
+                                 init_replay, sample, sample_jit,
+                                 specs_for_env)
+
+__all__ = ["ReplayState", "add_batch", "add_batch_jit", "init_replay",
+           "sample", "sample_jit", "specs_for_env"]

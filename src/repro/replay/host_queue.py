@@ -1,0 +1,98 @@
+"""Host-queue experience transfer — the paper's *baseline* (Fig. 4a).
+
+Reproduces the Queue/Pipe pathology the paper ablates against (§3.3.2,
+Table 3 QS rows): experience is dumped off-device (``jax.device_get`` =
+the inter-process pickle/dump), staged in a bounded host deque, and
+re-uploaded in queue-sized chunks. Both endpoints *block* on the dump and
+the upload, so transfer time is stolen from sampler and updater alike, and
+a large queue delays experience (policy-lag "transmission loss").
+
+Spreeze's shared-memory path (``replay.buffer``) never leaves HBM; this
+module exists so the ablation in ``benchmarks/fig6_ablations.py`` can
+measure exactly what the paper measured.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Deque, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HostQueue:
+    """Bounded FIFO of host-side experience chunks.
+
+    ``put`` blocks the *producer* for the device->host dump; ``drain``
+    blocks the *consumer* for the host->device upload. Stats mirror the
+    paper's Table 3 columns: transfer cycle (s) and transmission loss
+    (fraction of sampled frames dropped because the queue was full).
+    """
+
+    def __init__(self, queue_size: int):
+        self.queue_size = queue_size
+        self._q: Deque[Dict[str, np.ndarray]] = collections.deque()
+        self._frames_in_queue = 0
+        # stats
+        self.frames_offered = 0
+        self.frames_dropped = 0
+        self.put_time = 0.0
+        self.drain_time = 0.0
+        self._last_drain_t: Optional[float] = None
+        self.cycle_times = []
+
+    # ---- producer side (sampler process) --------------------------------
+    def put(self, batch: Dict[str, jax.Array]) -> bool:
+        """Dump a device batch to host and enqueue. Returns False (and
+        counts the frames as dropped) if the queue is full."""
+        n = int(next(iter(batch.values())).shape[0])
+        self.frames_offered += n
+        if self._frames_in_queue + n > self.queue_size:
+            self.frames_dropped += n
+            return False
+        t0 = time.perf_counter()
+        host = {k: np.asarray(jax.device_get(v)) for k, v in batch.items()}
+        self.put_time += time.perf_counter() - t0
+        self._q.append(host)
+        self._frames_in_queue += n
+        return True
+
+    # ---- consumer side (network update process) -------------------------
+    def drain(self, min_frames: int = 0) -> Optional[Dict[str, jax.Array]]:
+        """Upload every queued chunk to device as one concatenated batch.
+
+        ``min_frames`` reproduces the paper's Fig. 4a handoff: the
+        transfer happens only once the queue has accumulated a full load
+        ("waiting for the queue to be fully collected"), so experience
+        reaches the updater in stale, bursty batches. 0 = drain whatever
+        is there. Returns None when below the threshold or empty."""
+        if not self._q or self._frames_in_queue < min_frames:
+            return None
+        t0 = time.perf_counter()
+        chunks: list = []
+        while self._q:
+            chunks.append(self._q.popleft())
+        out = {k: jnp.asarray(np.concatenate([c[k] for c in chunks], axis=0))
+               for k in chunks[0]}
+        jax.block_until_ready(out)        # the consumer stall the paper plots
+        dt = time.perf_counter() - t0
+        self.drain_time += dt
+        now = time.perf_counter()
+        if self._last_drain_t is not None:
+            self.cycle_times.append(now - self._last_drain_t)
+        self._last_drain_t = now
+        self._frames_in_queue = 0
+        return out
+
+    # ---- stats -----------------------------------------------------------
+    @property
+    def transmission_loss(self) -> float:
+        if self.frames_offered == 0:
+            return 0.0
+        return self.frames_dropped / self.frames_offered
+
+    @property
+    def transfer_cycle(self) -> float:
+        return float(np.mean(self.cycle_times)) if self.cycle_times else 0.0

@@ -1,0 +1,4 @@
+"""Off-policy actor-critic RL algorithms (SAC / TD3 / DDPG)."""
+from repro.rl.base import AlgoHP, AlgoState, get_algo
+
+__all__ = ["AlgoHP", "AlgoState", "get_algo"]

@@ -1,0 +1,79 @@
+"""Shared RL-algorithm plumbing: state container, target updates, registry.
+
+Every algorithm exposes::
+
+  init_state(key, obs_dim, act_dim, hp)        -> AlgoState
+  make_update_step(hp, obs_dim, act_dim)       -> update(state, batch, key)
+  make_act(hp, deterministic)                  -> act(actor_params, obs, key)
+
+``batch`` is the replay sample dict {obs, act, rew, next_obs, done}. The
+update step is a pure function: jit + donate the state for in-place HBM
+updates (the shared-memory spirit of the paper at the device level).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, make_optimizer
+
+
+@dataclass(frozen=True)
+class AlgoHP:
+    """Hyperparameters shared by SAC/TD3/DDPG (paper defaults)."""
+    algo: str = "sac"
+    gamma: float = 0.99
+    tau: float = 0.005                 # polyak target rate
+    lr: float = 3e-4
+    hidden: Tuple[int, ...] = (256, 256)
+    # SAC
+    init_alpha: float = 0.2
+    autotune_alpha: bool = True
+    target_entropy_scale: float = 1.0  # target_entropy = -scale * act_dim
+    # TD3
+    policy_delay: int = 2
+    target_noise: float = 0.2
+    noise_clip: float = 0.5
+    explore_noise: float = 0.1         # TD3/DDPG exploration
+
+
+class AlgoState(NamedTuple):
+    actor: Any
+    q: Any                 # stacked ensemble (n, ...) over the `ac` axis
+    q_target: Any
+    log_alpha: jax.Array   # scalar (unused by TD3/DDPG)
+    opt_actor: Any
+    opt_q: Any
+    opt_alpha: Any
+    step: jax.Array
+
+
+def polyak(target, online, tau: float):
+    return jax.tree.map(lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+def make_opts(hp: AlgoHP) -> Tuple[Optimizer, Optimizer, Optimizer]:
+    mk = lambda: make_optimizer("adam", hp.lr)
+    return mk(), mk(), mk()
+
+
+_ALGOS: Dict[str, Any] = {}
+
+
+def register_algo(name: str):
+    def deco(mod):
+        _ALGOS[name] = mod
+        return mod
+    return deco
+
+
+def get_algo(name: str):
+    if name not in _ALGOS:
+        # populate on first use
+        from repro.rl import ddpg, sac, td3   # noqa: F401
+    if name not in _ALGOS:
+        raise KeyError(f"unknown algo {name!r}; known: {sorted(_ALGOS)}")
+    return _ALGOS[name]

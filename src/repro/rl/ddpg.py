@@ -1,0 +1,92 @@
+"""DDPG (Lillicrap et al. 2015) — classic deterministic actor-critic.
+
+Kept as the simplest off-policy baseline the framework parallelizes
+(the paper positions APE-DDPG as RLlib's strongest comparison arm).
+Uses a 1-tower "ensemble" so the same ``ac``-axis machinery applies.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl import networks as nets
+from repro.rl.base import AlgoHP, AlgoState, make_opts, polyak, register_algo
+
+
+def _det_action(p, obs):
+    return jnp.tanh(nets.mlp_tower(p, obs))
+
+
+def init_state(key, obs_dim: int, act_dim: int, hp: AlgoHP) -> AlgoState:
+    ka, kq = jax.random.split(key)
+    actor = nets.init_mlp_tower(ka, obs_dim, act_dim, hp.hidden)
+    q = nets.init_ensemble_q(kq, obs_dim, act_dim, 1, hp.hidden)
+    oa, oq, _ = make_opts(hp)
+    return AlgoState(
+        actor=actor, q=q,
+        q_target=jax.tree.map(jnp.copy, {"q": q, "actor": actor}),
+        log_alpha=jnp.zeros(()), opt_actor=oa.init(actor),
+        opt_q=oq.init(q), opt_alpha=None, step=jnp.zeros((), jnp.int32))
+
+
+def make_update_step(hp: AlgoHP, obs_dim: int, act_dim: int):
+    oa, oq, _ = make_opts(hp)
+
+    def update(state: AlgoState, batch: Dict[str, jax.Array], key
+               ) -> Tuple[AlgoState, Dict[str, jax.Array]]:
+        tgt = state.q_target
+        next_a = _det_action(tgt["actor"], batch["next_obs"])
+        q_next = nets.ensemble_q_values(tgt["q"], batch["next_obs"],
+                                        next_a)[0]
+        disc = batch.get("disc", hp.gamma * (1.0 - batch["done"]))
+        target = jax.lax.stop_gradient(batch["rew"] + disc * q_next)
+
+        w = batch.get("weight")
+
+        def critic_loss(qp):
+            qs = nets.ensemble_q_values(qp, batch["obs"], batch["act"])
+            se = (qs[0] - target) ** 2
+            if w is not None:
+                se = se * w
+            td = jnp.abs(qs[0] - target)
+            return jnp.mean(se), (qs.mean(), td)
+
+        (cl, (qmean, td_abs)), qg = jax.value_and_grad(
+            critic_loss, has_aux=True)(state.q)
+        new_q, opt_q = oq.update(qg, state.opt_q, state.q)
+
+        def actor_loss(ap):
+            a = _det_action(ap, batch["obs"])
+            return -jnp.mean(nets.ensemble_q_values(new_q, batch["obs"],
+                                                    a)[0])
+
+        al, ag = jax.value_and_grad(actor_loss)(state.actor)
+        new_actor, opt_actor = oa.update(ag, state.opt_actor, state.actor)
+
+        new_tgt = {"q": polyak(tgt["q"], new_q, hp.tau),
+                   "actor": polyak(tgt["actor"], new_actor, hp.tau)}
+        new_state = AlgoState(
+            actor=new_actor, q=new_q, q_target=new_tgt,
+            log_alpha=state.log_alpha, opt_actor=opt_actor, opt_q=opt_q,
+            opt_alpha=None, step=state.step + 1)
+        return new_state, {"critic_loss": cl, "actor_loss": al,
+                           "q_mean": qmean, "td_abs": td_abs}
+
+    return update
+
+
+def make_act(hp: AlgoHP, deterministic: bool = False):
+    def act(actor, obs, key):
+        a = _det_action(actor, obs)
+        if deterministic:
+            return a
+        return jnp.clip(
+            a + hp.explore_noise * jax.random.normal(key, a.shape),
+            -1.0, 1.0)
+    return act
+
+
+register_algo("ddpg")(sys.modules[__name__])

@@ -1,0 +1,222 @@
+"""Actor / critic networks for the Spreeze RL core.
+
+Two tower flavors:
+
+* ``mlp`` — the paper's own setting (SAC/TD3/DDPG on PyBullet-style
+  proprioceptive observations): 2x256 MLPs.
+* ``arch:<id>`` — any assigned architecture used as the policy/value
+  backbone (RLHF-style towers). The backbone consumes a token sequence
+  observation; heads read the last hidden state.
+
+Double-Q is a *stacked* ensemble: params carry a leading axis of size 2
+annotated with the logical ``ac`` axis (repro.distributed.sharding). Under
+``spreeze_rules`` that axis maps to the ``pod`` mesh axis, which is the
+TPU-native form of the paper's dual-GPU actor-critic model parallelism
+(Fig. 2b / Fig. 3): each pod owns one Q tower and only the scalar
+``min(Q1, Q2)`` crosses pods.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_rules, shard
+from repro.models.layers import dense_init
+
+LOG_STD_MIN, LOG_STD_MAX = -20.0, 2.0
+
+
+# ---------------------------------------------------------------------------
+# MLP towers (the paper's networks)
+# ---------------------------------------------------------------------------
+
+def init_mlp_tower(key, in_dim: int, out_dim: int,
+                   hidden: Sequence[int] = (256, 256), dtype=jnp.float32):
+    dims = (in_dim,) + tuple(hidden) + (out_dim,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+                  "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_tower(p, x):
+    n = len(p)
+    for i in range(n):
+        x = x @ p[f"l{i}"]["w"] + p[f"l{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# policy (actor)
+# ---------------------------------------------------------------------------
+
+def init_policy(key, obs_dim: int, act_dim: int,
+                hidden: Sequence[int] = (256, 256)):
+    """Gaussian policy: outputs (mean, log_std) -> tanh squashed."""
+    return init_mlp_tower(key, obs_dim, 2 * act_dim, hidden)
+
+
+def policy_dist(p, obs) -> Tuple[jax.Array, jax.Array]:
+    out = mlp_tower(p, obs)
+    mean, log_std = jnp.split(out, 2, axis=-1)
+    return mean, jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+
+
+def sample_action(p, obs, key) -> Tuple[jax.Array, jax.Array]:
+    """Reparameterized tanh-Gaussian sample -> (action in [-1,1], log_prob)."""
+    mean, log_std = policy_dist(p, obs)
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(key, mean.shape)
+    pre = mean + std * eps
+    act = jnp.tanh(pre)
+    logp = (-0.5 * (eps ** 2) - log_std
+            - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+    # tanh change of variables
+    logp = logp - jnp.log(jnp.clip(1 - act ** 2, 1e-6)).sum(-1)
+    return act, logp
+
+
+def deterministic_action(p, obs) -> jax.Array:
+    mean, _ = policy_dist(p, obs)
+    return jnp.tanh(mean)
+
+
+# ---------------------------------------------------------------------------
+# Q towers + double-Q ensemble over the `ac` axis
+# ---------------------------------------------------------------------------
+
+def init_q(key, obs_dim: int, act_dim: int,
+           hidden: Sequence[int] = (256, 256)):
+    return init_mlp_tower(key, obs_dim + act_dim, 1, hidden)
+
+
+def q_value(p, obs, act) -> jax.Array:
+    return mlp_tower(p, jnp.concatenate([obs, act], axis=-1))[..., 0]
+
+
+def init_ensemble_q(key, obs_dim: int, act_dim: int, n: int = 2,
+                    hidden: Sequence[int] = (256, 256)):
+    """n stacked Q towers; leading axis is the logical ``ac`` axis."""
+    ks = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: init_q(k, obs_dim, act_dim, hidden))(ks)
+    return shard_ensemble(stacked)
+
+
+def shard_ensemble(stacked):
+    """Annotate every leaf's leading (ensemble) dim with the ``ac`` axis —
+    the Spreeze dual-device model-parallel placement."""
+    r = current_rules()
+    if not r.active or r.ac is None:
+        return stacked
+    return jax.tree.map(
+        lambda a: shard(a, *(("ac",) + (None,) * (a.ndim - 1))), stacked)
+
+
+def ensemble_q_values(stacked, obs, act) -> jax.Array:
+    """-> (n, B) Q values; each ensemble member computed on its own ``ac``
+    shard (GSPMD keeps the vmapped tower local to its pod)."""
+    return jax.vmap(q_value, in_axes=(0, None, None))(stacked, obs, act)
+
+
+def min_q(stacked, obs, act) -> jax.Array:
+    """min over the ensemble — the only cross-``ac`` communication in the
+    paper's Fig. 3 (a (B,)-sized reduce, not a gradient exchange)."""
+    return ensemble_q_values(stacked, obs, act).min(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# arch-backbone towers (assigned architectures as RL policy/value nets)
+# ---------------------------------------------------------------------------
+
+def init_arch_policy(key, cfg: ModelConfig, act_dim: int,
+                     dtype=jnp.float32):
+    """LM backbone + Gaussian head reading the final position's hidden."""
+    from repro.models import factory
+    k1, k2 = jax.random.split(key)
+    return {
+        "backbone": factory.init_params(cfg, k1, dtype=dtype),
+        "head": {"w": dense_init(k2, (cfg.d_model, 2 * act_dim), dtype=dtype),
+                 "b": jnp.zeros((2 * act_dim,), dtype)},
+    }
+
+
+def arch_policy_dist(p, tokens, cfg: ModelConfig, dtype=jnp.bfloat16,
+                     remat: bool = True):
+    from repro.models import factory
+    h = _backbone_hidden(p["backbone"], tokens, cfg, dtype, remat)
+    out = h @ p["head"]["w"].astype(dtype) + p["head"]["b"].astype(dtype)
+    mean, log_std = jnp.split(out.astype(jnp.float32), 2, axis=-1)
+    return mean, jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+
+
+def init_arch_q(key, cfg: ModelConfig, act_dim: int, dtype=jnp.float32):
+    """Backbone + nonlinear (state, action) head: the action must interact
+    with the state nonlinearly or Q degenerates to f(s) + w.a."""
+    from repro.models import factory
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "backbone": factory.init_params(cfg, k1, dtype=dtype),
+        "act_in": {"w": dense_init(k2, (act_dim, cfg.d_model), dtype=dtype,
+                                   scale=3.0)},
+        "mix": {"w": dense_init(k3, (cfg.d_model, cfg.d_model), dtype=dtype),
+                "b": jnp.zeros((cfg.d_model,), dtype)},
+        "head": {"w": dense_init(k4, (cfg.d_model, 1), dtype=dtype),
+                 "b": jnp.zeros((1,), dtype)},
+    }
+
+
+def arch_q_value(p, tokens, act, cfg: ModelConfig, dtype=jnp.bfloat16,
+                 remat: bool = True) -> jax.Array:
+    h = _backbone_hidden(p["backbone"], tokens, cfg, dtype, remat)
+    h = h + act.astype(dtype) @ p["act_in"]["w"].astype(dtype)
+    h = jnp.tanh(h @ p["mix"]["w"].astype(dtype)
+                 + p["mix"]["b"].astype(dtype))
+    q = h @ p["head"]["w"].astype(dtype) + p["head"]["b"].astype(dtype)
+    return q.astype(jnp.float32)[..., 0]
+
+
+def _backbone_hidden(params, tokens, cfg: ModelConfig, dtype, remat):
+    """Final-position hidden state of the arch backbone (no LM head)."""
+    from repro.models import factory, transformer as tf
+    batch = {"tokens": tokens}
+    if cfg.family == "encdec":
+        B = tokens.shape[0]
+        batch["frames"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        B = tokens.shape[0]
+        batch["patches"] = jnp.zeros((B, cfg.num_patch_tokens, cfg.d_model),
+                                     dtype)
+    logits_unused_shape = None
+    # reuse the factory forward pieces up to ln_f
+    x = factory._embed(params, tokens, cfg, dtype)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"], x], axis=1)
+    pos = jnp.arange(x.shape[1])
+    kind = factory._layer_kind(cfg)
+    if cfg.family == "encdec":
+        memory = factory._encode(params, batch["frames"], cfg, dtype, remat)
+        x = x + params["dec_pos"][:tokens.shape[1]].astype(dtype)
+        x, _ = tf.stack_forward(params["layers"], x, cfg, kind="dec",
+                                positions=pos, memory=memory, dtype=dtype,
+                                remat=remat)
+    elif cfg.family == "hybrid":
+        for s, e in factory._hybrid_groups(cfg):
+            x, _, _ = tf.layer_forward(params["shared_attn"], x, cfg,
+                                       kind="dense", positions=pos,
+                                       dtype=dtype)
+            x, _ = tf.stack_forward(factory._slice_layers(params["layers"],
+                                                          s, e),
+                                    x, cfg, kind="ssm", positions=pos,
+                                    dtype=dtype, remat=remat)
+    else:
+        x, _ = tf.stack_forward(params["layers"], x, cfg, kind=kind,
+                                positions=pos, dtype=dtype, remat=remat)
+    x = tf.apply_norm(params["ln_f"], x, cfg)
+    return x[:, -1]

@@ -1,0 +1,78 @@
+"""Serving: prefill + batched decode steps (the shapes the dry-run lowers).
+
+``make_prefill_step`` / ``make_decode_step`` return pure functions:
+  prefill_step(params, batch)                 -> (cache, logits_last)
+  decode_step(params, token, cache, cache_pos) -> (logits, new_cache)
+
+``greedy_generate`` is the runnable example path (CPU-sized models).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.models import factory
+from repro.train.trainer import dtype_of
+
+
+def make_prefill_step(rc: RunConfig, seq_len: int) -> Callable:
+    cfg = rc.model
+    cdtype = dtype_of(rc.compute_dtype)
+
+    def prefill_step(params, batch):
+        return factory.prefill(params, batch, cfg, seq_len, dtype=cdtype)
+
+    return prefill_step
+
+
+def make_decode_step(rc: RunConfig) -> Callable:
+    cfg = rc.model
+    cdtype = dtype_of(rc.compute_dtype)
+
+    def decode_step(params, token, cache, cache_pos):
+        return factory.decode_step(params, token, cache, cache_pos, cfg,
+                                   dtype=cdtype)
+
+    return decode_step
+
+
+def greedy_generate(rc: RunConfig, params, batch: Dict[str, jax.Array],
+                    prompt_len: int, num_tokens: int) -> jax.Array:
+    """Prefill the prompt then greedily decode ``num_tokens`` tokens."""
+    cfg = rc.model
+    total = prompt_len + num_tokens
+    prefill_step = jax.jit(make_prefill_step(rc, total))
+    decode_step = jax.jit(make_decode_step(rc), donate_argnums=(2,))
+
+    cache, logits = prefill_step(params, batch)
+    # grow attention caches to the generation horizon
+    cache = _grow_cache(cfg, cache, total)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    pos = prompt_len + (cfg.num_patch_tokens if cfg.family == "vlm" else 0)
+    for i in range(num_tokens):
+        out.append(tok)
+        logits, cache = decode_step(params, tok, cache, jnp.int32(pos + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(out, axis=1)
+
+
+def _grow_cache(cfg: ModelConfig, cache, total_len: int):
+    """Pad prefill-sized attention caches (dim after the batch dim) up to
+    ``total_len`` ring slots (no-op for SSM states / SWA rings)."""
+    from repro.models.attention import cache_len_for
+    target = cache_len_for(cfg, total_len)
+
+    def grow(path, a):
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v") and a.ndim == 5 and a.shape[2] < target:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, target - a.shape[2])
+            return jnp.pad(a, pad)
+        return a
+
+    return jax.tree_util.tree_map_with_path(grow, cache)

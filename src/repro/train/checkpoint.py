@@ -1,0 +1,68 @@
+"""Checkpointing: flat-path ``.npz`` snapshots.
+
+This doubles as the paper's SSD weight-transmission channel (§3.3.1): the
+network-update process periodically drops weights to disk; evaluation /
+visualization consumers pick them up without ever blocking the updater.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+    """Atomic save (write-then-rename, so concurrent readers never see a
+    torn file — the property the paper relies on for SSD weight sync)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree or its eval_shape)."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    ref = _flatten(like)
+    assert set(ref) == set(flat), (
+        f"checkpoint keys mismatch: {set(ref) ^ set(flat)}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_ref:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_k)
+        out.append(jnp.asarray(flat[key], dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out), meta
+
+
+def latest_step(ckpt_dir: str) -> int:
+    """Highest step index among step_<n>.npz files (-1 if none)."""
+    if not os.path.isdir(ckpt_dir):
+        return -1
+    steps = [-1]
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("step_") and f.endswith(".npz"):
+            try:
+                steps.append(int(f[5:-4]))
+            except ValueError:
+                pass
+    return max(steps)

@@ -1,0 +1,105 @@
+"""Optimizers in pure JAX (optax is not available offline).
+
+adam / adamw / sgd(+momentum) with global-norm clipping and an optional
+linear-warmup schedule. States are pytrees mirroring the params, so they
+shard with ``params_sharding_tree`` exactly like the params do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # scalar int32
+    mu: Dict                 # first moment (or momentum); zeros for plain sgd
+    nu: Dict                 # second moment; zeros-like for sgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable         # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def make_schedule(base_lr: float, warmup_steps: int = 0,
+                  decay_steps: Optional[int] = None) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        lr = jnp.asarray(base_lr, jnp.float32)
+        if warmup_steps:
+            lr = lr * jnp.minimum(1.0, (step + 1) / warmup_steps)
+        if decay_steps:
+            frac = jnp.clip((step - warmup_steps)
+                            / max(1, decay_steps - warmup_steps), 0.0, 1.0)
+            lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr
+    return lr
+
+
+def make_optimizer(name: str, learning_rate: float, *, weight_decay: float = 0.0,
+                   grad_clip: float = 0.0, b1: float = 0.9, b2: float = 0.999,
+                   eps: float = 1e-8, momentum: float = 0.9,
+                   warmup_steps: int = 0,
+                   decay_steps: Optional[int] = None) -> Optimizer:
+    sched = make_schedule(learning_rate, warmup_steps, decay_steps)
+
+    def init(params) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree.map(jnp.zeros_like, zeros)
+                        if name in ("adam", "adamw") else
+                        jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                     params))
+
+    def update(grads, state: OptState, params) -> Tuple[Dict, OptState]:
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        step = state.step + 1
+        lr = sched(step)
+
+        if name in ("adam", "adamw"):
+            mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                              state.mu, grads)
+            nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                              state.nu, grads)
+            sf = step.astype(jnp.float32)
+            bc1 = 1 - b1 ** sf
+            bc2 = 1 - b2 ** sf
+
+            def upd(p, m, v):
+                u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                if name == "adamw" and weight_decay:
+                    u = u + weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+            new_params = jax.tree.map(upd, params, mu, nu)
+            return new_params, OptState(step, mu, nu)
+
+        if name == "sgd":
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, mu)
+            return new_params, OptState(step, mu, state.nu)
+
+        raise ValueError(f"unknown optimizer {name!r}")
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,80 @@
+"""LM training step + loop (the "network update process" at pod scale).
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+donated (params, opt_state); the dry-run lowers exactly this function.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import factory
+from repro.train.optimizer import Optimizer, make_optimizer
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def make_train_step(rc: RunConfig, opt: Optional[Optimizer] = None
+                    ) -> Callable:
+    cfg = rc.model
+    opt = opt or make_optimizer(rc.optimizer, rc.learning_rate,
+                                weight_decay=rc.weight_decay,
+                                grad_clip=rc.grad_clip)
+    cdtype = dtype_of(rc.compute_dtype)
+
+    def train_step(params, opt_state, batch
+                   ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+        def loss(p):
+            return factory.loss_fn(p, batch, cfg, dtype=cdtype,
+                                   remat=rc.remat)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=l)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(rc: RunConfig, key, opt: Optional[Optimizer] = None):
+    cfg = rc.model
+    opt = opt or make_optimizer(rc.optimizer, rc.learning_rate,
+                                weight_decay=rc.weight_decay,
+                                grad_clip=rc.grad_clip)
+    params = factory.init_params(cfg, key, dtype=dtype_of(rc.param_dtype))
+    return params, opt.init(params), opt
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps_per_sec: float
+
+
+def train_loop(rc: RunConfig, batches, *, steps: int, key=None,
+               log_every: int = 10, callback=None) -> TrainResult:
+    """Simple synchronous LM training loop over an iterable of batches."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params, opt_state, opt = init_train_state(rc, key)
+    step_fn = jax.jit(make_train_step(rc, opt), donate_argnums=(0, 1))
+    losses = []
+    t0 = None
+    for i, batch in zip(range(steps), batches):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i == 0:   # skip compile in the rate
+            jax.block_until_ready(metrics["loss"])
+            t0 = time.perf_counter()
+        losses.append(float(metrics["loss"]))
+        if callback:
+            callback(i, params, metrics)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - (t0 or time.perf_counter())
+    rate = (len(losses) - 1) / dt if dt > 0 and len(losses) > 1 else 0.0
+    return TrainResult(losses=losses, steps_per_sec=rate)

@@ -1,0 +1,98 @@
+"""Prefill+decode must reproduce the full-forward logits (per family).
+
+MoE archs are tested with a large capacity factor so no token is dropped —
+capacity dropping is the one *expected* train/decode divergence.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data.tokens import make_batch
+from repro.models import factory
+from repro.serve.engine import _grow_cache
+
+SHAPE = InputShape("smoke", seq_len=32, global_batch=2, kind="train")
+
+ARCHS = ["smollm-360m", "qwen2-0.5b", "h2o-danube-1.8b", "mixtral-8x7b",
+         "kimi-k2-1t-a32b", "mamba2-130m", "zamba2-1.2b", "whisper-medium",
+         "paligemma-3b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    key = jax.random.PRNGKey(1)
+    params = factory.init_params(cfg, key)
+    batch = make_batch(cfg, SHAPE, key)
+    logits_full, _ = factory.forward(params, batch, cfg, dtype=jnp.float32,
+                                     remat=False)
+    S = batch["tokens"].shape[1]
+    prefix = cfg.num_patch_tokens if cfg.family == "vlm" else 0
+
+    b2 = dict(batch, tokens=batch["tokens"][:, :S - 1])
+    cache, lg_pre = factory.prefill(params, b2, cfg, S - 1 + prefix,
+                                    dtype=jnp.float32)
+    cache = _grow_cache(cfg, cache, S + prefix + 8)
+    lg_dec, _ = factory.decode_step(params, batch["tokens"][:, S - 1:S],
+                                    cache, jnp.int32(S - 1 + prefix), cfg,
+                                    dtype=jnp.float32)
+    e_pre = float(jnp.max(jnp.abs(logits_full[:, prefix + S - 2]
+                                  - lg_pre[:, 0])))
+    e_dec = float(jnp.max(jnp.abs(logits_full[:, prefix + S - 1]
+                                  - lg_dec[:, 0])))
+    assert e_pre < 1e-4, (arch, e_pre)
+    assert e_dec < 1e-4, (arch, e_dec)
+
+
+def test_multi_token_decode_chain():
+    """Decode N tokens one-by-one == forward on the whole sequence."""
+    cfg = get_config("smollm-360m").reduced()
+    key = jax.random.PRNGKey(3)
+    params = factory.init_params(cfg, key)
+    batch = make_batch(cfg, SHAPE, key)
+    S = batch["tokens"].shape[1]
+    logits_full, _ = factory.forward(params, batch, cfg, dtype=jnp.float32,
+                                     remat=False)
+    n_pre = S - 5
+    cache, _ = factory.prefill(params,
+                               dict(batch, tokens=batch["tokens"][:, :n_pre]),
+                               cfg, n_pre, dtype=jnp.float32)
+    cache = _grow_cache(cfg, cache, S)
+    for i in range(n_pre, S):
+        lg, cache = factory.decode_step(params, batch["tokens"][:, i:i + 1],
+                                        cache, jnp.int32(i), cfg,
+                                        dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(logits_full[:, i] - lg[:, 0])))
+        assert err < 1e-4, (i, err)
+
+
+def test_swa_ring_cache_decode():
+    """Sliding-window archs decode correctly once the ring has wrapped."""
+    cfg = get_config("h2o-danube-1.8b").reduced()          # window 64
+    cfg = dataclasses.replace(cfg, sliding_window=16)
+    key = jax.random.PRNGKey(4)
+    params = factory.init_params(cfg, key)
+    shape = InputShape("smoke", seq_len=48, global_batch=2, kind="train")
+    batch = make_batch(cfg, shape, key)
+    S = 48
+    logits_full, _ = factory.forward(params, batch, cfg, dtype=jnp.float32,
+                                     remat=False)
+    n_pre = 40
+    cache, _ = factory.prefill(params,
+                               dict(batch, tokens=batch["tokens"][:, :n_pre]),
+                               cfg, n_pre, dtype=jnp.float32)
+    # ring cache is window-sized: no growth needed
+    assert cache["k"].shape[2] == 16
+    for i in range(n_pre, S):
+        lg, cache = factory.decode_step(params, batch["tokens"][:, i:i + 1],
+                                        cache, jnp.int32(i), cfg,
+                                        dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(logits_full[:, i] - lg[:, 0])))
+        assert err < 1e-4, (i, err)

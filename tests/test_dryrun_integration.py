@@ -1,0 +1,42 @@
+"""Dry-run integration: run launch/dryrun.py in a subprocess (it owns the
+512-device XLA_FLAGS override, which must precede jax init) and check the
+record it writes. One small pair per step-kind keeps this under ~2 min.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, out_dir):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args,
+         "--out", str(out_dir)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=560)
+
+
+@pytest.mark.slow
+def test_dryrun_decode_pair(tmp_path):
+    r = _run(["--arch", "qwen2-0.5b", "--shape", "decode_32k"], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / "qwen2-0.5b_decode_32k_16x16.json"))
+    assert rec["chips"] == 256
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["flops_per_device"] > 0
+    assert rec["peak_memory_per_device"] > 0
+    # decode_32k reads the whole KV cache: memory term must dwarf compute
+    assert rec["memory_s"] > rec["compute_s"]
+
+
+@pytest.mark.slow
+def test_dryrun_skip_record(tmp_path):
+    r = _run(["--arch", "qwen2-0.5b", "--shape", "long_500k"], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / "qwen2-0.5b_long_500k_16x16.json"))
+    assert "skipped" in rec

@@ -1,0 +1,87 @@
+"""Prioritized replay: proportionality property + PER integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.replay import buffer as rb
+from repro.replay import prioritized as per
+
+
+def _mk(capacity=64):
+    return per.init_prioritized(capacity, rb.specs_for_env(2, 1))
+
+
+def _rows(n, base=0.0):
+    return {"obs": jnp.zeros((n, 2)), "act": jnp.zeros((n, 1)),
+            "rew": jnp.arange(n, dtype=jnp.float32) + base,
+            "next_obs": jnp.zeros((n, 2)), "done": jnp.zeros((n,))}
+
+
+def test_new_rows_get_max_priority():
+    st_ = _mk()
+    st_ = per.add_batch(st_, _rows(8))
+    assert float(st_.priorities[:8].min()) == 1.0
+    assert float(st_.priorities[8:].max()) == 0.0
+
+
+def test_unwritten_rows_never_sampled():
+    st_ = _mk(64)
+    st_ = per.add_batch(st_, _rows(5))
+    _, idx, _ = per.sample(st_, jax.random.PRNGKey(0), 5)
+    assert int(idx.max()) < 5
+
+
+def test_sampling_proportional_to_priority():
+    """Rows with 10x priority are drawn ~10x more often (alpha=1)."""
+    st_ = _mk(16)
+    st_ = per.add_batch(st_, _rows(16))
+    st_ = per.update_priorities(
+        st_, jnp.arange(16), jnp.where(jnp.arange(16) < 8, 10.0, 1.0),
+        eps=0.0)
+    counts = np.zeros(16)
+    for i in range(400):
+        _, idx, _ = per.sample(st_, jax.random.PRNGKey(i), 4, alpha=1.0)
+        for j in np.asarray(idx):
+            counts[j] += 1
+    hi, lo = counts[:8].mean(), counts[8:].mean()
+    assert 5.0 < hi / lo < 20.0, (hi, lo)
+
+
+def test_importance_weights_compensate():
+    st_ = _mk(8)
+    st_ = per.add_batch(st_, _rows(8))
+    st_ = per.update_priorities(st_, jnp.arange(8),
+                                jnp.arange(1.0, 9.0), eps=0.0)
+    _, idx, w = per.sample(st_, jax.random.PRNGKey(1), 8, alpha=1.0,
+                           beta=1.0)
+    # at beta=1, w_i ∝ 1/p_i: the highest-priority draw has the smallest w
+    p = np.asarray(st_.priorities)[np.asarray(idx)]
+    assert float(w[np.argmax(p)]) == pytest.approx(float(w.min()))
+    assert float(w.max()) == pytest.approx(1.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 32), k=st.integers(1, 8),
+       seed=st.integers(0, 10**6))
+def test_sample_without_replacement_property(n, k, seed):
+    st_ = _mk(64)
+    st_ = per.add_batch(st_, _rows(n))
+    k = min(k, n)
+    _, idx, w = per.sample(st_, jax.random.PRNGKey(seed), k)
+    arr = np.asarray(idx)
+    assert len(set(arr.tolist())) == k          # no replacement
+    assert (arr < n).all()
+    assert float(w.max()) <= 1.0 + 1e-6
+
+
+def test_update_priorities_tracks_max():
+    st_ = _mk(8)
+    st_ = per.add_batch(st_, _rows(8))
+    st_ = per.update_priorities(st_, jnp.asarray([0]), jnp.asarray([50.0]))
+    assert float(st_.max_priority) >= 50.0
+    # subsequent adds inherit the new max
+    st_ = per.add_batch(st_, _rows(2))
+    # capacity 8: wrapped rows 0..1 get the new max priority
+    assert float(st_.priorities[0]) >= 50.0

@@ -1,0 +1,147 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.replay import buffer as rb
+
+SET = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# replay ring buffer invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(capacity=st.integers(4, 64),
+       adds=st.lists(st.integers(1, 20), min_size=1, max_size=8))
+def test_replay_size_and_ptr_invariants(capacity, adds):
+    st_ = rb.init_replay(capacity, rb.specs_for_env(2, 1))
+    total = 0
+    for i, n in enumerate(adds):
+        rows = {
+            "obs": jnp.full((n, 2), float(i)),
+            "act": jnp.zeros((n, 1)),
+            "rew": jnp.arange(n, dtype=jnp.float32) + 1000.0 * i,
+            "next_obs": jnp.zeros((n, 2)),
+            "done": jnp.zeros((n,)),
+        }
+        st_ = rb.add_batch(st_, rows)
+        total += n
+        assert int(st_.size) == min(total, capacity)
+        assert int(st_.ptr) == total % capacity
+
+
+@settings(**SET)
+@given(capacity=st.integers(8, 32), n=st.integers(1, 40),
+       batch=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_replay_sample_always_live(capacity, n, batch, seed):
+    """Sampled rows are always rows that were actually written."""
+    st_ = rb.init_replay(capacity, rb.specs_for_env(1, 1))
+    rows = {"obs": jnp.zeros((n, 1)), "act": jnp.zeros((n, 1)),
+            "rew": jnp.arange(n, dtype=jnp.float32),
+            "next_obs": jnp.zeros((n, 1)), "done": jnp.zeros((n,))}
+    st_ = rb.add_batch(st_, rows)
+    out = rb.sample(st_, jax.random.PRNGKey(seed), batch)
+    live = set(np.asarray(st_.data["rew"][:int(st_.size)]).tolist()) if \
+        int(st_.size) < capacity else \
+        set(np.asarray(st_.data["rew"]).tolist())
+    got = set(np.asarray(out["rew"]).tolist())
+    assert got <= (live | {0.0})
+    # written values must come from the input stream
+    assert got <= set(range(n)) | {0.0}
+
+
+# ---------------------------------------------------------------------------
+# kernel invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(s=st.integers(4, 48), h=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 1000))
+def test_flash_attention_matches_oracle_property(s, h, g, d, seed):
+    kv = max(1, h // g)
+    if h % kv:
+        kv = 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, kv, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - want))) < 5e-5
+
+
+@settings(**SET)
+@given(rows=st.integers(1, 33), d=st.sampled_from([8, 64, 96]),
+       seed=st.integers(0, 1000))
+def test_rmsnorm_row_norm_property(rows, d, seed):
+    """rmsnorm output with unit weight has RMS 1 along the last axis."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d)) * 3.0
+    out = rmsnorm(x, jnp.ones((d,)), block_rows=8)
+    rms = jnp.sqrt(jnp.mean(out ** 2, axis=-1))
+    assert float(jnp.max(jnp.abs(rms - 1.0))) < 1e-3
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000))
+def test_attention_rowsum_property(seed):
+    """Softmax rows sum to 1 -> attention output lies in conv hull of V:
+    with constant V == c, the output equals c exactly."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (1, 24, 2, 8), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 24, 2, 8), jnp.float32)
+    v = jnp.full((1, 24, 2, 8), 2.5, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+    assert float(jnp.max(jnp.abs(out - 2.5))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(clip=st.floats(0.1, 5.0), scale=st.floats(0.1, 100.0),
+       seed=st.integers(0, 1000))
+def test_grad_clip_bounds_global_norm(clip, scale, seed):
+    from repro.train.optimizer import clip_by_global_norm, global_norm
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (7, 3)) * scale,
+         "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (5,)) * scale}
+    clipped, _ = clip_by_global_norm(g, clip)
+    assert float(global_norm(clipped)) <= clip * (1 + 1e-4)
+
+
+@settings(**SET)
+@given(lr=st.floats(1e-5, 1e-2), steps=st.integers(1, 10))
+def test_adam_moves_toward_minimum(lr, steps):
+    from repro.train.optimizer import make_optimizer
+    opt = make_optimizer("adam", lr)
+    params = {"w": jnp.asarray(3.0)}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = {"w": 2 * params["w"]}        # d/dw w^2
+        params, state = opt.update(grads, state, params)
+    assert float(params["w"]) < 3.0
+
+
+# ---------------------------------------------------------------------------
+# env invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1),
+       env_name=st.sampled_from(["pendulum", "cartpole", "reacher", "hopper"]))
+def test_env_determinism(seed, env_name):
+    from repro.envs import base as env_base
+    env = env_base.make(env_name)
+    key = jax.random.PRNGKey(seed)
+    s1, s2 = env.reset(key), env.reset(key)
+    a = jnp.zeros((env.spec.act_dim,))
+    r1 = env.step(s1, a)[2]
+    r2 = env.step(s2, a)[2]
+    assert float(r1) == float(r2)

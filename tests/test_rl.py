@@ -1,0 +1,130 @@
+"""RL algorithm unit tests: SAC/TD3/DDPG update mechanics + learning."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.rl import networks as nets
+from repro.rl.base import AlgoHP, get_algo
+
+OBS, ACT, BATCH = 3, 1, 64
+
+
+def _batch(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "obs": jax.random.normal(ks[0], (BATCH, OBS)),
+        "act": jnp.tanh(jax.random.normal(ks[1], (BATCH, ACT))),
+        "rew": jax.random.normal(ks[2], (BATCH,)),
+        "next_obs": jax.random.normal(ks[3], (BATCH, OBS)),
+        "done": (jax.random.uniform(ks[4], (BATCH,)) < 0.1).astype(
+            jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("algo", ["sac", "td3", "ddpg"])
+def test_update_step_finite_and_changes_params(algo):
+    hp = AlgoHP(algo=algo)
+    mod = get_algo(algo)
+    key = jax.random.PRNGKey(0)
+    state = mod.init_state(key, OBS, ACT, hp)
+    update = jax.jit(mod.make_update_step(hp, OBS, ACT))
+    before = jax.tree.leaves(state.actor)[0].copy()
+    for i in range(3):
+        state, metrics = update(state, _batch(jax.random.fold_in(key, i)),
+                                jax.random.fold_in(key, 100 + i))
+    for v in metrics.values():
+        assert bool(jnp.isfinite(v).all()), (algo, metrics)
+    after = jax.tree.leaves(state.actor)[0]
+    assert not jnp.allclose(before, after)
+    assert int(state.step) == 3
+
+
+@pytest.mark.parametrize("algo", ["sac", "td3", "ddpg"])
+def test_target_networks_track_slowly(algo):
+    hp = AlgoHP(algo=algo, tau=0.005)
+    mod = get_algo(algo)
+    key = jax.random.PRNGKey(1)
+    state = mod.init_state(key, OBS, ACT, hp)
+    update = jax.jit(mod.make_update_step(hp, OBS, ACT))
+    tgt0 = jax.tree.leaves(state.q_target)[0].copy()
+    q0 = jax.tree.leaves(state.q)[0].copy()
+    state, _ = update(state, _batch(key), key)
+    tgt1 = jax.tree.leaves(state.q_target)[0]
+    q1 = jax.tree.leaves(state.q)[0]
+    # online moved more than target did
+    assert float(jnp.abs(q1 - q0).max()) > float(
+        jnp.abs(tgt1 - tgt0).max())
+
+
+def test_sac_alpha_autotunes():
+    hp = AlgoHP(algo="sac", autotune_alpha=True)
+    mod = get_algo("sac")
+    key = jax.random.PRNGKey(2)
+    state = mod.init_state(key, OBS, ACT, hp)
+    a0 = float(state.log_alpha)
+    update = jax.jit(mod.make_update_step(hp, OBS, ACT))
+    for i in range(5):
+        state, _ = update(state, _batch(jax.random.fold_in(key, i)),
+                          jax.random.fold_in(key, i + 50))
+    assert float(state.log_alpha) != a0
+
+
+def test_td3_policy_delay():
+    hp = AlgoHP(algo="td3", policy_delay=2)
+    mod = get_algo("td3")
+    key = jax.random.PRNGKey(3)
+    state = mod.init_state(key, OBS, ACT, hp)
+    update = jax.jit(mod.make_update_step(hp, OBS, ACT))
+    actor0 = jax.tree.leaves(state.actor)[0].copy()
+    # step counter starts at 0 -> update happens (0 % 2 == 0)
+    state, _ = update(state, _batch(key), key)
+    actor1 = jax.tree.leaves(state.actor)[0].copy()
+    assert not jnp.allclose(actor0, actor1)
+    # next step (step=1): delayed, actor frozen
+    state, _ = update(state, _batch(jax.random.fold_in(key, 9)), key)
+    actor2 = jax.tree.leaves(state.actor)[0]
+    assert jnp.allclose(actor1, actor2)
+
+
+def test_tanh_gaussian_logprob_matches_numerical():
+    """sample_action's log-prob == change-of-variables density."""
+    key = jax.random.PRNGKey(4)
+    p = nets.init_policy(key, OBS, ACT)
+    obs = jax.random.normal(key, (512, OBS))
+    a, logp = nets.sample_action(p, obs, key)
+    assert a.shape == (512, ACT) and logp.shape == (512,)
+    assert float(jnp.max(jnp.abs(a))) <= 1.0
+    # entropy of squashed gaussian <= unsquashed gaussian entropy
+    mean, log_std = nets.policy_dist(p, obs)
+    gauss_ent = (0.5 * jnp.log(2 * jnp.pi * jnp.e)
+                 + log_std).sum(-1).mean()
+    assert float(-logp.mean()) <= float(gauss_ent) + 1e-3
+
+
+def test_min_q_is_elementwise_min():
+    key = jax.random.PRNGKey(5)
+    q = nets.init_ensemble_q(key, OBS, ACT, 2)
+    obs = jax.random.normal(key, (16, OBS))
+    act = jnp.tanh(jax.random.normal(key, (16, ACT)))
+    qs = nets.ensemble_q_values(q, obs, act)
+    assert qs.shape == (2, 16)
+    assert jnp.allclose(nets.min_q(q, obs, act), qs.min(0))
+
+
+def test_sac_learns_simple_bandit():
+    """SAC should solve a 1-step bandit: rew = -(a - 0.5)^2."""
+    hp = AlgoHP(algo="sac", lr=3e-3)
+    mod = get_algo("sac")
+    key = jax.random.PRNGKey(6)
+    state = mod.init_state(key, OBS, ACT, hp)
+    update = jax.jit(mod.make_update_step(hp, OBS, ACT))
+    obs = jnp.zeros((BATCH, OBS))
+    for i in range(300):
+        k = jax.random.fold_in(key, i)
+        a = jnp.tanh(jax.random.normal(k, (BATCH, ACT)))
+        batch = {"obs": obs, "act": a,
+                 "rew": -(a[:, 0] - 0.5) ** 2,
+                 "next_obs": obs, "done": jnp.ones((BATCH,))}
+        state, _ = update(state, batch, jax.random.fold_in(k, 1))
+    a_final = nets.deterministic_action(state.actor, obs[:1])
+    assert abs(float(a_final[0, 0]) - 0.5) < 0.15, float(a_final[0, 0])
