@@ -1,0 +1,85 @@
+"""Fused megastep vs eager per-round dispatch: the pipeline's perf number.
+
+Times both paths on pendulum+SAC and reports dispatched rounds/s plus
+the paper's sampling / update-frame Hz (Tables 2-3 quantities). Writes
+``BENCH_pipeline.json`` at the repo root so future PRs have a perf
+trajectory to regress against.
+
+The probe config is deliberately **dispatch-bound** (tiny nets, 1 env,
+1 update/round): per-round device compute is then comparable to the
+per-round host dispatch overhead the megastep eliminates, which is the
+quantity under test. On compute-bound production configs the eager
+loop's async dispatch already overlaps host and device, so fusion is
+neutral there — the win is wherever host re-entry bounds the Hz
+(paper's whole thesis, Fig. 4). Arms warm-compile before the timed
+window and run ``--repeats`` times (median reported): this container's
+CPU is noisy.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_pipeline [--seconds S]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core import SpreezeConfig, SpreezeTrainer
+from repro.rl.base import AlgoHP
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_arm(fused: bool, seconds: float, rpd: int, repeats: int) -> dict:
+    cfg = SpreezeConfig(
+        env_name="pendulum", algo="sac", num_envs=1, batch_size=32,
+        chunk_len=1, updates_per_round=1, warmup_frames=64,
+        replay_capacity=4096, eval_every_rounds=10**9,
+        rounds_per_dispatch=rpd, fused=fused,
+        hp=AlgoHP(algo="sac", hidden=(32, 32)))
+    tr = SpreezeTrainer(cfg)
+    # warm pass: one dispatch through each compiled path, so the timed
+    # window measures steady-state dispatch throughput, not XLA compiles
+    tr.train(max_seconds=0.01)
+    runs = []
+    for _ in range(repeats):
+        tr.total_frames = 0
+        tr.total_updates = 0
+        runs.append(tr.train(max_seconds=seconds))
+    hist = sorted(runs, key=lambda h: h.update_hz)[len(runs) // 2]
+    # rounds only accrue after warmup, so update_hz is the clean signal
+    rounds_per_s = hist.update_hz / cfg.updates_per_round
+    return {"fused": fused, "rounds_per_dispatch": rpd if fused else 1,
+            "rounds_per_s": round(rounds_per_s, 1),
+            "sampling_hz": round(hist.sampling_hz, 1),
+            "update_hz": round(hist.update_hz, 1),
+            "update_frame_hz": round(hist.update_frame_hz, 1)}
+
+
+def main(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,
+         out: str = os.path.join(ROOT, "BENCH_pipeline.json")) -> dict:
+    unfused = run_arm(False, seconds, rpd, repeats)
+    fused = run_arm(True, seconds, rpd, repeats)
+    speedup = fused["rounds_per_s"] / max(unfused["rounds_per_s"], 1e-9)
+    emit("pipeline", "unfused", **unfused)
+    emit("pipeline", "fused", **fused)
+    emit("pipeline", "speedup", rounds_per_s_ratio=round(speedup, 2))
+    report = {"env": "pendulum", "algo": "sac", "seconds_per_arm": seconds,
+              "unfused": unfused, "fused": fused,
+              "fused_over_unfused_rounds_per_s": round(speedup, 3)}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=2.0,
+                    help="wall budget per timed repeat")
+    ap.add_argument("--rpd", type=int, default=16,
+                    help="rounds_per_dispatch for the fused arm")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats per arm (median reported)")
+    args = ap.parse_args()
+    main(seconds=args.seconds, rpd=args.rpd, repeats=args.repeats)

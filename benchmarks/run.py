@@ -17,13 +17,16 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=("table1", "table2", "table3", "fig6", "fig8",
-                             "roofline", "kernels"))
+                             "roofline", "kernels", "pipeline"))
     args = ap.parse_args(argv)
     t0 = time.perf_counter()
 
     def want(name):
         return args.only in (None, name)
 
+    if want("pipeline"):
+        from benchmarks import bench_pipeline
+        bench_pipeline.main(seconds=8.0 if args.full else 2.0)
     if want("table2"):
         from benchmarks import table2_throughput
         table2_throughput.main(seconds=20.0 if args.full else 8.0)

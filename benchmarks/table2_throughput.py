@@ -14,25 +14,29 @@ from benchmarks.common import emit
 from repro.core import SpreezeConfig, SpreezeTrainer
 
 CONFIGS = [
-    # name, batch_size, num_envs, transfer, queue_size, prioritized
-    ("spreeze",          8192, 16, "shared", 0, False),
-    ("spreeze-bs128",     128, 16, "shared", 0, False),
-    ("spreeze-bs32768", 32768, 16, "shared", 0, False),
-    ("spreeze-sp2",      8192,  2, "shared", 0, False),
-    ("spreeze-per",      8192, 16, "shared", 0, True),   # APE-X-style PER
-    ("queue-qs5000",     8192, 16, "queue", 5000, False),
-    ("queue-qs20000",    8192, 16, "queue", 20000, False),
+    # name, batch_size, num_envs, transfer, queue_size, prioritized, rpd
+    ("spreeze",          8192, 16, "shared", 0, False, 4),
+    ("spreeze-nofuse",   8192, 16, "shared", 0, False, 1),  # eager rounds
+    ("spreeze-bs128",     128, 16, "shared", 0, False, 4),
+    ("spreeze-bs32768", 32768, 16, "shared", 0, False, 4),
+    ("spreeze-sp2",      8192,  2, "shared", 0, False, 4),
+    ("spreeze-per",      8192, 16, "shared", 0, True,  4),  # APE-X-ish PER
+    ("queue-qs5000",     8192, 16, "queue", 5000, False, 1),
+    ("queue-qs20000",    8192, 16, "queue", 20000, False, 1),
 ]
 
 
 def run_config(name, batch_size, num_envs, transfer, queue_size,
-               prioritized, seconds: float):
+               prioritized, rounds_per_dispatch, seconds: float):
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=num_envs,
         batch_size=batch_size, chunk_len=16, updates_per_round=4,
         warmup_frames=1024, eval_every_rounds=10**9,  # no eval: pure thru
         transfer=transfer, queue_size=queue_size or 20000,
-        prioritized=prioritized)
+        prioritized=prioritized,
+        rounds_per_dispatch=rounds_per_dispatch,
+        fused=False if (transfer == "shared"
+                        and rounds_per_dispatch == 1) else None)
     tr = SpreezeTrainer(cfg)
     hist = tr.train(max_seconds=seconds)
     emit("table2", name,

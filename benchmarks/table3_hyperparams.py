@@ -18,15 +18,20 @@ from repro.core.adaptation import tune_batch_size, tune_num_envs
 def main(iters: int = 3):
     tuned = auto_tune("pendulum", "sac",
                       bs_grid=(128, 512, 2048, 8192, 32768),
-                      env_grid=(1, 2, 4, 8, 16, 32), iters=iters)
+                      env_grid=(1, 2, 4, 8, 16, 32),
+                      rpd_grid=(1, 2, 4, 8), iters=iters)
     for c in tuned["bs_log"].candidates:
         emit("table3/batch_size", f"bs{c['value']}",
              update_frame_hz=f"{c['throughput']:.4g}")
     for c in tuned["env_log"].candidates:
         emit("table3/num_envs", f"sp{c['value']}",
              sampling_hz=f"{c['throughput']:.4g}")
+    for c in tuned["rpd_log"].candidates:
+        emit("table3/rounds_per_dispatch", f"r{c['value']}",
+             rounds_per_s=f"{c['throughput']:.4g}")
     emit("table3", "auto-tuned", batch_size=tuned["batch_size"],
-         num_envs=tuned["num_envs"])
+         num_envs=tuned["num_envs"],
+         rounds_per_dispatch=tuned["rounds_per_dispatch"])
 
 
 if __name__ == "__main__":

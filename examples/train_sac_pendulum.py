@@ -21,23 +21,31 @@ def main():
 
     if args.no_adapt:
         batch_size, num_envs = 2048, 8
+        rpd = SpreezeConfig.rounds_per_dispatch
     else:
         print("== hyperparameter adaptation (paper §3.4) ==")
         tuned = auto_tune(args.env, "sac",
                           bs_grid=(128, 512, 2048, 8192),
-                          env_grid=(2, 4, 8, 16, 32), iters=2)
+                          env_grid=(2, 4, 8, 16, 32),
+                          rpd_grid=(1, 2, 4, 8), iters=2)
         batch_size, num_envs = tuned["batch_size"], tuned["num_envs"]
+        rpd = tuned["rounds_per_dispatch"]
         for c in tuned["bs_log"].candidates:
             print(f"  batch {c['value']:>6}: {c['throughput']:,.0f} "
                   "update-frames/s")
         for c in tuned["env_log"].candidates:
             print(f"  envs  {c['value']:>6}: {c['throughput']:,.0f} "
                   "env-frames/s")
-        print(f"  -> batch_size={batch_size} num_envs={num_envs}\n")
+        for c in tuned["rpd_log"].candidates:
+            print(f"  r/dis {c['value']:>6}: {c['throughput']:,.0f} "
+                  "rounds/s")
+        print(f"  -> batch_size={batch_size} num_envs={num_envs} "
+              f"rounds_per_dispatch={rpd}\n")
 
     cfg = SpreezeConfig(
         env_name=args.env, algo="sac", num_envs=num_envs,
         batch_size=batch_size, updates_per_round=8,
+        rounds_per_dispatch=rpd,
         weight_sync="ssd",          # eval reads .npz snapshots (paper §3.3.1)
         eval_every_rounds=25)
     trainer = SpreezeTrainer(cfg)

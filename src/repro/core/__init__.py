@@ -1,8 +1,9 @@
 """Spreeze core: async pipeline, AC model parallelism, adaptation, transfer."""
-from repro.core.adaptation import auto_tune, tune_batch_size, tune_num_envs
+from repro.core.adaptation import (auto_tune, tune_batch_size, tune_num_envs,
+                                   tune_rounds_per_dispatch)
 from repro.core.pipeline import SpreezeConfig, SpreezeTrainer, TrainHistory
 from repro.core.transfer import QueueTransfer, SharedTransfer, make_transfer
 
 __all__ = ["SpreezeConfig", "SpreezeTrainer", "TrainHistory", "auto_tune",
-           "tune_batch_size", "tune_num_envs", "QueueTransfer",
-           "SharedTransfer", "make_transfer"]
+           "tune_batch_size", "tune_num_envs", "tune_rounds_per_dispatch",
+           "QueueTransfer", "SharedTransfer", "make_transfer"]

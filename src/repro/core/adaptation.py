@@ -10,6 +10,12 @@ that both throughput curves are convex and (nearly) independent:
 * **number of sampling processes** — CPU-bound: grow the vectorized env
   count while the sampling frame rate keeps improving.
 
+We add a third knob the paper's process model doesn't have but the
+single-controller mapping does: **rounds per dispatch** — host-bound:
+grow the megastep fusion factor while dispatched rounds/s keeps
+improving (per-dispatch Python/runtime overhead amortizes, then device
+compute dominates and the curve flattens — same convex geometry).
+
 On TPU/CPU-JAX the utilization signal the paper reads from nvidia-smi /
 psutil is replaced by the measured steps/s of the compiled functions —
 the quantity the utilization was a proxy for.
@@ -88,14 +94,32 @@ def tune_num_envs(make_sample_call: Callable[[int], Callable[[], None]], *,
     return tune_geometric(measure, grid, min_gain=min_gain)
 
 
+def tune_rounds_per_dispatch(make_megastep_call: Callable[[int],
+                                                          Callable[[], None]],
+                             *, grid: Sequence[int] = (1, 2, 4, 8, 16),
+                             iters: int = 5, min_gain: float = 0.10
+                             ) -> Tuple[int, AdaptLog]:
+    """Pick the megastep fusion factor maximizing dispatched rounds/s."""
+
+    def measure(r: int) -> float:
+        call = make_megastep_call(r)
+        sec = _time_fn(call, iters)
+        return r / sec                       # rounds/s
+
+    return tune_geometric(measure, grid, min_gain=min_gain)
+
+
 def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
               bs_grid: Sequence[int] = (128, 512, 2048, 8192, 32768),
               env_grid: Sequence[int] = (1, 2, 4, 8, 16, 32),
+              rpd_grid: Sequence[int] = (1, 2, 4, 8),
               iters: int = 3) -> Dict:
     """End-to-end adaptation for a SpreezeTrainer config (paper's auto mode).
 
-    Returns {"batch_size", "num_envs", "bs_log", "env_log"}. The two
-    searches are independent (paper §3.4.2) so they run sequentially.
+    Returns {"batch_size", "num_envs", "rounds_per_dispatch", "bs_log",
+    "env_log", "rpd_log"}. The searches are independent (paper §3.4.2) so
+    they run sequentially; the dispatch-fusion search runs last, on a
+    trainer probe built with the tuned batch size and env count.
     """
     import jax.numpy as jnp
 
@@ -164,5 +188,26 @@ def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
     bs, bs_log = tune_batch_size(make_update_call, grid=bs_grid, iters=iters)
     ne, env_log = tune_num_envs(make_sample_call, grid=env_grid,
                                 chunk_len=chunk_len, iters=iters)
-    return {"batch_size": bs, "num_envs": ne,
-            "bs_log": bs_log, "env_log": env_log}
+
+    # third knob: megastep fusion factor, probed on a real trainer built
+    # with the two tuned values (deferred import: pipeline imports us)
+    from repro.core.pipeline import SpreezeConfig, SpreezeTrainer
+
+    def make_megastep_call(r: int):
+        cfg = SpreezeConfig(env_name=env_name, algo=algo, num_envs=ne,
+                            batch_size=bs, chunk_len=chunk_len,
+                            replay_capacity=max(2 * bs, 4096),
+                            warmup_frames=0, eval_every_rounds=10**9,
+                            rounds_per_dispatch=r)
+        tr = SpreezeTrainer(cfg)
+
+        def call():
+            (tr.state, tr.replay, tr.env_states, tr.key, m) = tr._megastep(
+                tr.state, tr.replay, tr.env_states, tr.key)
+            jax.block_until_ready(m["critic_loss"])
+        return call
+
+    rpd, rpd_log = tune_rounds_per_dispatch(make_megastep_call,
+                                            grid=rpd_grid, iters=iters)
+    return {"batch_size": bs, "num_envs": ne, "rounds_per_dispatch": rpd,
+            "bs_log": bs_log, "env_log": env_log, "rpd_log": rpd_log}

@@ -16,6 +16,23 @@ baseline; weights move to eval either zero-copy ("live") or through
 The sync-vs-async ablation (Fig. 4a vs 4b) is the ``sync_mode`` flag:
 sync blocks on every handoff (centrally-agreed transmission time), async
 never blocks except at metric log points.
+
+**Fused megastep** (``rounds_per_dispatch``): the paper's thesis is that
+throughput dies at process handoffs, not in compute — and on the
+single-controller mapping the handoffs are Python->device dispatches.
+The eager loop re-enters Python several times per round (sampler, ring
+write, update round, eval/viz gating); with ``rounds_per_dispatch = R``
+the trainer instead enqueues ONE compiled ``megastep`` that runs R
+iterations of {sampler chunk -> ring write -> K update steps} inside a
+``jax.lax.scan`` with all large state donated, and threads the per-round
+metrics (mean reward, critic loss) out as stacked (R,) arrays. Tradeoff:
+larger R amortizes host dispatch (more rounds/s, the Table 2 quantity)
+but coarsens eval/viz gating and weight-sync granularity to R rounds and
+lengthens time-to-first-dispatch (compile covers R rounds). The fused
+path is only available on the shared-memory transfer in async mode; the
+``queue`` baseline and ``sync_mode`` keep the eager per-round loop so
+the Fig. 4a ablation (and the dispatch-overhead comparison in
+``benchmarks/bench_pipeline.py``) measure exactly what they did before.
 """
 from __future__ import annotations
 
@@ -48,6 +65,8 @@ class SpreezeConfig:
     warmup_frames: int = 2_048
     chunk_len: int = 32           # env steps fused into one sampler dispatch
     updates_per_round: int = 4    # update steps dispatched per host loop
+    rounds_per_dispatch: int = 4  # rounds fused into one device megastep
+    fused: Optional[bool] = None  # None = auto (shared transfer + async)
     transfer: str = "shared"      # shared | queue
     queue_size: int = 20_000
     sync_mode: bool = False       # Fig. 4a baseline: block on every handoff
@@ -89,6 +108,15 @@ class TrainHistory:
         self.update_steps.append(steps)
 
 
+def _window_hits(round_i: int, window: int, every: int) -> bool:
+    """True iff the round window [round_i, round_i + window) contains a
+    multiple of ``every`` — the fused-dispatch generalization of
+    ``round_i % every == 0`` (to which it reduces at window == 1)."""
+    if not every:
+        return False
+    return (round_i + window - 1) // every > (round_i - 1) // every
+
+
 class SpreezeTrainer:
     """End-to-end Spreeze training on a pure-JAX env."""
 
@@ -118,9 +146,17 @@ class SpreezeTrainer:
             self.replay = rb.init_replay(cfg.replay_capacity, specs)
         self.env_states = self.env.reset_batch(k_env, cfg.num_envs)
 
+        fusable = cfg.transfer == "shared" and not cfg.sync_mode
+        self.use_fused = fusable if cfg.fused is None else cfg.fused
+        if self.use_fused and not fusable:
+            raise ValueError("fused megastep requires the shared-memory "
+                             "transfer path and async mode (sync_mode and "
+                             "the queue baseline stay on the eager loop)")
+
         self._build_compiled()
         self.total_frames = 0
         self.total_updates = 0
+        self.last_metrics = None     # stacked (R,) arrays per megastep
 
     # ------------------------------------------------------------------ #
     # compiled "processes"
@@ -223,10 +259,43 @@ class SpreezeTrainer:
                 step, state0, None, length=env.spec.episode_len)
             return obs, a, r
 
+        if cfg.prioritized:
+            from repro.replay import prioritized as per
+            push = per.add_batch
+        else:
+            push = rb.add_batch
+
+        def make_megastep(rounds: int):
+            """One XLA program for ``rounds`` iterations of
+            {sampler chunk -> ring write -> K update steps}: the host
+            enqueues one dispatch per R rounds instead of ~6 Python->
+            device transitions per round."""
+
+            def megastep(state, replay, env_states, key):
+                def one_round(carry, _):
+                    state, replay, env_states, key = carry
+                    env_states, flat, key, mrew = sampler_chunk(
+                        state.actor, env_states, key)
+                    replay = push(replay, flat)
+                    state, replay, key, closs = update_round(
+                        state, replay, key)
+                    return (state, replay, env_states, key), (mrew, closs)
+
+                (state, replay, env_states, key), (rews, closs) = \
+                    jax.lax.scan(one_round,
+                                 (state, replay, env_states, key),
+                                 None, length=rounds)
+                return state, replay, env_states, key, {
+                    "mean_rew": rews, "critic_loss": closs}
+
+            return jax.jit(megastep, donate_argnums=(0, 1, 2))
+
         self._viz = jax.jit(viz_episode)
         self._sampler = jax.jit(sampler_chunk, donate_argnums=(1,))
         self._update_round = jax.jit(update_round, donate_argnums=(0, 1))
         self._eval = jax.jit(eval_batch)
+        self._make_megastep = make_megastep
+        self._megastep = make_megastep(cfg.rounds_per_dispatch)
 
     # ------------------------------------------------------------------ #
     # weight sync to the eval/vis "processes"
@@ -246,14 +315,10 @@ class SpreezeTrainer:
     # ------------------------------------------------------------------ #
     # the training loop (async by default)
     # ------------------------------------------------------------------ #
-    def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
-              target_return: Optional[float] = None,
-              log_cb: Optional[Callable] = None) -> TrainHistory:
+    def _warmup(self):
+        """Fill the pool with random-policy experience (eager path)."""
         cfg = self.cfg
-        hist = TrainHistory()
         frames_per_chunk = cfg.num_envs * cfg.chunk_len
-
-        # ---- warmup: fill the pool with random-policy experience --------
         while self.total_frames < cfg.warmup_frames:
             self.env_states, exp, self.key, _ = self._sampler(
                 self.state.actor, self.env_states, self.key)
@@ -263,6 +328,16 @@ class SpreezeTrainer:
         self.replay = self.transfer.flush(self.replay, force=True)
         jax.block_until_ready(jax.tree.leaves(self.replay))
 
+    def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
+              target_return: Optional[float] = None,
+              log_cb: Optional[Callable] = None) -> TrainHistory:
+        cfg = self.cfg
+        hist = TrainHistory()
+        frames_per_chunk = cfg.num_envs * cfg.chunk_len
+        self._warmup()
+        # fused: round counter advances R per dispatch; gating generalizes
+        window = cfg.rounds_per_dispatch if self.use_fused else 1
+
         t0 = time.perf_counter()
         round_i = 0
         solved_at = None
@@ -270,22 +345,30 @@ class SpreezeTrainer:
             now = time.perf_counter() - t0
             if now >= max_seconds or self.total_frames >= max_frames:
                 break
-            # --- sampler "process": dispatch, don't block -----------------
-            self.env_states, exp, self.key, _ = self._sampler(
-                self.state.actor, self.env_states, self.key)
-            self.replay = self.transfer.push(self.replay, exp)
-            self.total_frames += frames_per_chunk
-            if cfg.sync_mode:
-                jax.block_until_ready(exp)     # Fig. 4a: wait at the handoff
-            # --- updater "process" ----------------------------------------
-            self.replay = self.transfer.flush(self.replay)
-            self.state, self.replay, self.key, closs = self._update_round(
-                self.state, self.replay, self.key)
-            self.total_updates += cfg.updates_per_round
-            if cfg.sync_mode:
-                jax.block_until_ready(closs)
+            if self.use_fused:
+                # --- one device-resident megastep = R whole rounds --------
+                (self.state, self.replay, self.env_states, self.key,
+                 self.last_metrics) = self._megastep(
+                    self.state, self.replay, self.env_states, self.key)
+                self.total_frames += frames_per_chunk * window
+                self.total_updates += cfg.updates_per_round * window
+            else:
+                # --- sampler "process": dispatch, don't block -------------
+                self.env_states, exp, self.key, _ = self._sampler(
+                    self.state.actor, self.env_states, self.key)
+                self.replay = self.transfer.push(self.replay, exp)
+                self.total_frames += frames_per_chunk
+                if cfg.sync_mode:
+                    jax.block_until_ready(exp)  # Fig. 4a: wait at handoff
+                # --- updater "process" ------------------------------------
+                self.replay = self.transfer.flush(self.replay)
+                self.state, self.replay, self.key, closs = \
+                    self._update_round(self.state, self.replay, self.key)
+                self.total_updates += cfg.updates_per_round
+                if cfg.sync_mode:
+                    jax.block_until_ready(closs)
             # --- visualization "process" -----------------------------------
-            if cfg.viz_every_rounds and round_i % cfg.viz_every_rounds == 0:
+            if _window_hits(round_i, window, cfg.viz_every_rounds):
                 obs, act_tr, rew = self._viz(
                     self._actor_for_eval(),
                     jax.random.fold_in(self.key, 7 + round_i))
@@ -297,7 +380,7 @@ class SpreezeTrainer:
                              obs=np.asarray(obs), act=np.asarray(act_tr),
                              rew=np.asarray(rew))
             # --- eval "process" -------------------------------------------
-            if round_i % cfg.eval_every_rounds == 0:
+            if _window_hits(round_i, window, cfg.eval_every_rounds):
                 ret = float(self._eval(self._actor_for_eval(),
                                        jax.random.fold_in(self.key, round_i)))
                 t = time.perf_counter() - t0
@@ -309,7 +392,7 @@ class SpreezeTrainer:
                         and solved_at is None):
                     solved_at = t
                     break
-            round_i += 1
+            round_i += window
 
         jax.block_until_ready(self.state.step)
         wall = time.perf_counter() - t0

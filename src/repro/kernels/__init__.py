@@ -4,6 +4,7 @@ flash_attention   blocked online-softmax GQA attention (prefill/train)
 decode_attention  flash-decode: 1 query vs long KV cache (decode shapes)
 ssd_scan          Mamba-2 SSD chunked scan (ssm/hybrid archs)
 rmsnorm           fused reduce+scale (memory-bound fusion)
+replay_ops        replay-ring in-place scatter + batched gather (RL path)
 
 ``ops`` holds the jit'd wrappers and the ``use_pallas`` switch; each
 kernel is validated against ``ref`` by shape/dtype sweeps in

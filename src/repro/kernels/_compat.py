@@ -1,0 +1,10 @@
+"""jax version-compat shims for Pallas TPU.
+
+The compiler-params dataclass was renamed upstream
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+jax ships so the kernels run on both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

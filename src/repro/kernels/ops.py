@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import replay_ops as _replay
 from repro.kernels import rmsnorm as _rms
 from repro.kernels import ssd_scan as _ssd
 
@@ -66,3 +67,17 @@ def ssd_scan(x, dtA, B_, C_, *, chunk: int = 64
 def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256
             ) -> jax.Array:
     return _rms.rmsnorm(x, weight, eps=eps, block_rows=block_rows)
+
+
+@jax.jit
+def ring_write(data, batch, ptr) -> jax.Array:
+    """Replay-ring scatter of (n, ...) rows at (ptr + i) % capacity.
+    In place via input/output aliasing when the caller donates ``data``
+    (``add_batch_jit`` and the fused megastep do)."""
+    return _replay.ring_write(data, batch, ptr)
+
+
+@jax.jit
+def ring_gather(data, idx) -> jax.Array:
+    """Batched random row gather from the replay ring."""
+    return _replay.ring_gather(data, idx)

@@ -1,0 +1,117 @@
+"""Pallas replay-ring kernels: in-place scatter + batched gather (§3.3.2).
+
+The replay pool is Spreeze's shared memory; its two hot operations are
+the sampler-side ring write (rows land at ``(ptr + i) % capacity``) and
+the updater-side batched random gather. On the jnp path XLA lowers these
+to scatter/gather HLOs against the whole ``(capacity, ...)`` operand;
+these kernels instead walk the rows with dynamic-slice stores, and
+``ring_write`` pins the pool buffer with ``input_output_aliases`` so the
+scatter is genuinely in place — the paper's "no dump" shared-memory
+semantics — when the caller donates the pool (``add_batch_jit`` /
+the fused megastep do).
+
+Both kernels run in interpret mode on this CPU container and compile to
+Mosaic on TPU. ``ring_write_ref`` / ``ring_gather_ref`` are the jnp
+oracles the tests compare against, including the wraparound case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _as2d(x: jax.Array) -> jax.Array:
+    """(rows, ...) -> (rows, features); scalars get a singleton feature."""
+    return x.reshape(x.shape[0], -1)
+
+
+# --------------------------------------------------------------------------- #
+# ring write: scatter n rows at (ptr + i) % capacity
+# --------------------------------------------------------------------------- #
+
+def _ring_write_kernel(ptr_ref, batch_ref, data_ref, out_ref,
+                       *, cap: int, n: int):
+    del data_ref     # aliased with out_ref: rows not written keep values
+    ptr = ptr_ref[0]
+
+    def body(i, carry):
+        idx = jax.lax.rem(ptr + i, cap)
+        out_ref[pl.ds(idx, 1), :] = batch_ref[pl.ds(i, 1), :]
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def ring_write(data: jax.Array, batch: jax.Array, ptr,
+               *, interpret: bool = True) -> jax.Array:
+    """Write ``batch`` (n, ...) into ``data`` (capacity, ...) at the ring
+    positions ``(ptr + i) % capacity``; rows beyond the write stay put
+    (the output aliases the input buffer). Requires n <= capacity — the
+    caller (``replay.buffer.add_batch``) drops older duplicate rows."""
+    cap, n = data.shape[0], batch.shape[0]
+    if n > cap:
+        raise ValueError(f"ring_write of {n} rows into capacity {cap}")
+    orig = data.shape
+    d2 = _as2d(data)
+    b2 = _as2d(batch.astype(data.dtype))
+    out = pl.pallas_call(
+        functools.partial(_ring_write_kernel, cap=cap, n=n),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct(d2.shape, d2.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(jnp.asarray(ptr, jnp.int32).reshape((1,)), b2, d2)
+    return out.reshape(orig)
+
+
+def ring_write_ref(data: jax.Array, batch: jax.Array, ptr) -> jax.Array:
+    """jnp oracle for ``ring_write``."""
+    cap, n = data.shape[0], batch.shape[0]
+    idx = (jnp.asarray(ptr, jnp.int32) + jnp.arange(n)) % cap
+    return data.at[idx].set(batch.astype(data.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# ring gather: batched random row gather
+# --------------------------------------------------------------------------- #
+
+def _ring_gather_kernel(idx_ref, data_ref, out_ref, *, bsz: int):
+    def body(i, carry):
+        j = idx_ref[i]
+        out_ref[pl.ds(i, 1), :] = data_ref[pl.ds(j, 1), :]
+        return carry
+
+    jax.lax.fori_loop(0, bsz, body, 0)
+
+
+def ring_gather(data: jax.Array, idx: jax.Array,
+                *, interpret: bool = True) -> jax.Array:
+    """Gather ``data[idx]`` for an (batch,) int vector of ring slots."""
+    orig_row = data.shape[1:]
+    d2 = _as2d(data)
+    bsz = idx.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_ring_gather_kernel, bsz=bsz),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bsz, d2.shape[1]), data.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), d2)
+    return out.reshape((bsz,) + orig_row)
+
+
+def ring_gather_ref(data: jax.Array, idx: jax.Array) -> jax.Array:
+    """jnp oracle for ``ring_gather``."""
+    return jnp.take(data, idx, axis=0)

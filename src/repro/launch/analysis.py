@@ -37,6 +37,16 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def cost_dict(compiled) -> Dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: newer
+    jax returns a dict, older a one-element list of per-computation
+    dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for m in _TYPE_RE.finditer(type_str):

@@ -59,13 +59,17 @@ def main(argv=None):
     if args.mode == "rl":
         from repro.core import SpreezeConfig, SpreezeTrainer, auto_tune
         num_envs, batch_size = args.num_envs, args.batch_size
+        rounds_per_dispatch = SpreezeConfig.rounds_per_dispatch
         if args.adapt:
             tuned = auto_tune(args.env, args.algo)
             num_envs, batch_size = tuned["num_envs"], tuned["batch_size"]
-            print(f"[adapt] batch_size={batch_size} num_envs={num_envs}")
+            rounds_per_dispatch = tuned["rounds_per_dispatch"]
+            print(f"[adapt] batch_size={batch_size} num_envs={num_envs} "
+                  f"rounds_per_dispatch={rounds_per_dispatch}")
         cfg = SpreezeConfig(
             env_name=args.env, algo=args.algo, num_envs=num_envs,
             batch_size=batch_size, updates_per_round=args.updates_per_round,
+            rounds_per_dispatch=rounds_per_dispatch,
             transfer=args.transfer, queue_size=args.queue_size,
             sync_mode=args.sync, weight_sync=args.weight_sync,
             seed=args.seed)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.kernels import ops as kops
 
 
 class ReplayState(NamedTuple):
@@ -44,14 +45,46 @@ def specs_for_env(obs_dim: int, act_dim: int):
             "done": ((), f32)}
 
 
+def write_plan(ptr, n: int, cap: int):
+    """Ring slots for an n-row write: (ptr0, keep) — slot of the first
+    surviving row and how many of the *newest* rows survive. Writes
+    larger than the capacity keep only the newest ``capacity`` rows (the
+    older ones would have been overwritten within the same call, and
+    duplicate ring indices make ``.at[idx].set`` winner-undefined), so
+    the result matches writing the rows one at a time. Shared with the
+    prioritized pool so priorities land on exactly the data's slots."""
+    drop = max(0, n - cap)              # static: shapes are trace constants
+    return (ptr + drop) % cap, n - drop
+
+
+def scatter_rows(dest: jax.Array, rows: jax.Array, ptr0) -> jax.Array:
+    """dest[(ptr0 + i) % cap] = rows via the Pallas ring kernel or the
+    jnp scatter, per the ``use_pallas`` switch (read at trace time)."""
+    if kops.pallas_enabled():
+        return kops.ring_write(dest, rows, ptr0)
+    idx = (ptr0 + jnp.arange(rows.shape[0])) % dest.shape[0]
+    return dest.at[idx].set(rows.astype(dest.dtype))
+
+
+def gather_rows(data: jax.Array, idx: jax.Array) -> jax.Array:
+    """data[idx] via the Pallas ring kernel or jnp.take, per the
+    ``use_pallas`` switch (read at trace time)."""
+    if kops.pallas_enabled():
+        return kops.ring_gather(data, idx)
+    return jnp.take(data, idx, axis=0)
+
+
 def add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayState:
     """Scatter N new rows at (ptr + i) % capacity. Jit with donated state —
-    the write happens in place in HBM (shared-memory semantics)."""
+    the write happens in place in HBM (shared-memory semantics). See
+    ``write_plan`` for oversized-write handling."""
     any_leaf = next(iter(batch.values()))
     n = any_leaf.shape[0]
     cap = next(iter(state.data.values())).shape[0]
-    idx = (state.ptr + jnp.arange(n)) % cap
-    data = {k: state.data[k].at[idx].set(batch[k].astype(state.data[k].dtype))
+    ptr0, keep = write_plan(state.ptr, n, cap)
+    if keep < n:
+        batch = {k: v[n - keep:] for k, v in batch.items()}
+    data = {k: scatter_rows(state.data[k], batch[k], ptr0)
             for k in state.data}
     return ReplayState(data=data,
                        ptr=(state.ptr + n) % cap,
@@ -66,12 +99,22 @@ def sample(state: ReplayState, key, batch_size: int) -> Dict[str, jax.Array]:
                              jnp.maximum(state.size, 1))
     # ring alignment: the oldest live row sits at ptr when full
     idx = (idx + jnp.where(state.size >= cap, state.ptr, 0)) % cap
-    return {k: jnp.take(v, idx, axis=0) for k, v in state.data.items()}
+    return {k: gather_rows(v, idx) for k, v in state.data.items()}
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
+def _pallas_keyed_jit(fn):
+    """Donated-jit factory keyed on the use_pallas switch: the contextvar
+    is read at trace time, so a shared jit cache would otherwise pin
+    whichever path was traced first for a given shape."""
+    return functools.lru_cache(maxsize=None)(
+        lambda pallas: functools.partial(jax.jit, donate_argnums=(0,))(fn))
+
+
+_add_batch_jit = _pallas_keyed_jit(add_batch)
+
+
 def add_batch_jit(state: ReplayState, batch) -> ReplayState:
-    return add_batch(state, batch)
+    return _add_batch_jit(kops.pallas_enabled())(state, batch)
 
 
 def sample_jit(batch_size: int):

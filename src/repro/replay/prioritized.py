@@ -20,7 +20,10 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.replay.buffer import ReplayState, init_replay
+from repro.kernels import ops as kops
+from repro.replay.buffer import (ReplayState, _pallas_keyed_jit,
+                                 gather_rows, init_replay, scatter_rows,
+                                 write_plan)
 
 
 class PrioritizedState(NamedTuple):
@@ -42,8 +45,10 @@ def add_batch(state: PrioritizedState, batch: Dict[str, jax.Array]
     from repro.replay.buffer import add_batch as base_add
     n = next(iter(batch.values())).shape[0]
     cap = state.priorities.shape[0]
-    idx = (state.base.ptr + jnp.arange(n)) % cap
-    pri = state.priorities.at[idx].set(state.max_priority)
+    # same ring slots as base_add's data write, incl. oversized-write drop
+    ptr0, keep = write_plan(state.base.ptr, n, cap)
+    pri = scatter_rows(state.priorities,
+                       jnp.broadcast_to(state.max_priority, (keep,)), ptr0)
     return PrioritizedState(base=base_add(state.base, batch),
                             priorities=pri,
                             max_priority=state.max_priority)
@@ -62,7 +67,7 @@ def sample(state: PrioritizedState, key, batch_size: int, *,
     g = -jnp.log(-jnp.log(
         jax.random.uniform(key, logp.shape, minval=1e-12, maxval=1.0)))
     idx = jax.lax.top_k(logp + g, batch_size)[1]
-    batch = {k: jnp.take(v, idx, axis=0) for k, v in state.base.data.items()}
+    batch = {k: gather_rows(v, idx) for k, v in state.base.data.items()}
 
     # importance weights: w_i = (N * P(i))^-beta, normalized by max
     p = jnp.maximum(state.priorities, 1e-12) ** alpha
@@ -83,6 +88,8 @@ def update_priorities(state: PrioritizedState, idx, td_errors,
         max_priority=jnp.maximum(state.max_priority, jnp.max(pri_new)))
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
+_add_batch_jit = _pallas_keyed_jit(add_batch)
+
+
 def add_batch_jit(state: PrioritizedState, batch) -> PrioritizedState:
-    return add_batch(state, batch)
+    return _add_batch_jit(kops.pallas_enabled())(state, batch)

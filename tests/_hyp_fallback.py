@@ -1,0 +1,66 @@
+"""Minimal stand-in for ``hypothesis`` when the optional dep is absent.
+
+Provides just the surface the test-suite uses — ``given``, ``settings``
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``lists``
+strategies — backed by a fixed-seed numpy sampler, so the property tests
+still run (as deterministic fuzz sweeps) instead of crashing collection
+with ``ModuleNotFoundError``. With hypothesis installed the real library
+is used and this module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def _lists(elements, *, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.draw(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+strategies = types.SimpleNamespace(integers=_integers, floats=_floats,
+                                   sampled_from=_sampled_from, lists=_lists)
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # crc32, not hash(): str hashing is randomized per process
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(MAX_EXAMPLES):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # pytest resolves fixtures through __wrapped__'s signature; the
+        # drawn params are not fixtures, so hide the original signature
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn

@@ -1,0 +1,102 @@
+"""Fused megastep: numerical equivalence with the eager per-round loop,
+metric threading, gating windows, and config validation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SpreezeConfig, SpreezeTrainer
+from repro.core.pipeline import _window_hits
+
+
+def _cfg(**kw):
+    base = dict(env_name="pendulum", algo="sac", num_envs=2, batch_size=32,
+                chunk_len=4, updates_per_round=2, warmup_frames=32,
+                replay_capacity=256, eval_every_rounds=10**9, seed=3)
+    base.update(kw)
+    return SpreezeConfig(**base)
+
+
+def _drive_eager(tr, rounds):
+    for _ in range(rounds):
+        tr.env_states, exp, tr.key, _ = tr._sampler(
+            tr.state.actor, tr.env_states, tr.key)
+        tr.replay = tr.transfer.push(tr.replay, exp)
+        tr.replay = tr.transfer.flush(tr.replay)
+        tr.state, tr.replay, tr.key, _ = tr._update_round(
+            tr.state, tr.replay, tr.key)
+
+
+def _drive_fused(tr, dispatches):
+    for _ in range(dispatches):
+        (tr.state, tr.replay, tr.env_states, tr.key,
+         tr.last_metrics) = tr._megastep(tr.state, tr.replay,
+                                         tr.env_states, tr.key)
+
+
+@pytest.mark.parametrize("prioritized", [False, True])
+def test_fused_matches_eager(prioritized):
+    R, D = 3, 2                     # 3 fused rounds/dispatch, 2 dispatches
+    tr_e = SpreezeTrainer(_cfg(fused=False, prioritized=prioritized))
+    tr_f = SpreezeTrainer(_cfg(fused=True, rounds_per_dispatch=R,
+                               prioritized=prioritized))
+    tr_e._warmup()
+    tr_f._warmup()
+    _drive_eager(tr_e, R * D)
+    _drive_fused(tr_f, D)
+    re = tr_e.replay.base if prioritized else tr_e.replay
+    rf = tr_f.replay.base if prioritized else tr_f.replay
+    # ring bookkeeping is integer math: bit-for-bit
+    assert int(re.ptr) == int(rf.ptr)
+    assert int(re.size) == int(rf.size)
+    # PRNG threading is counter-based integer math: bit-for-bit
+    np.testing.assert_array_equal(np.asarray(tr_e.key),
+                                  np.asarray(tr_f.key))
+    for a, b in zip(jax.tree.leaves(tr_e.state.actor),
+                    jax.tree.leaves(tr_f.state.actor)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    if prioritized:
+        np.testing.assert_allclose(np.asarray(tr_e.replay.priorities),
+                                   np.asarray(tr_f.replay.priorities),
+                                   rtol=1e-2, atol=1e-4)
+
+
+def test_megastep_metrics_are_stacked_per_round():
+    R = 4
+    tr = SpreezeTrainer(_cfg(rounds_per_dispatch=R))
+    tr._warmup()
+    _drive_fused(tr, 1)
+    m = tr.last_metrics
+    assert m["mean_rew"].shape == (R,)
+    assert m["critic_loss"].shape == (R,)
+    assert np.isfinite(np.asarray(m["critic_loss"])).all()
+
+
+def test_trainer_fused_short_run_with_eval():
+    tr = SpreezeTrainer(_cfg(rounds_per_dispatch=4, eval_every_rounds=2,
+                             eval_episodes=1))
+    assert tr.use_fused             # auto: shared transfer + async
+    hist = tr.train(max_seconds=4.0)
+    assert hist.sampling_hz > 0 and hist.update_hz > 0
+    assert len(hist.eval_returns) >= 1
+    assert all(np.isfinite(r) for r in hist.eval_returns)
+
+
+def test_fused_requires_shared_async():
+    with pytest.raises(ValueError):
+        SpreezeTrainer(_cfg(fused=True, transfer="queue", queue_size=64))
+    with pytest.raises(ValueError):
+        SpreezeTrainer(_cfg(fused=True, sync_mode=True))
+    assert not SpreezeTrainer(_cfg(transfer="queue",
+                                   queue_size=64)).use_fused
+    assert not SpreezeTrainer(_cfg(sync_mode=True)).use_fused
+
+
+def test_window_hits_generalizes_modulo():
+    for every in (1, 2, 3, 5):
+        for r in range(12):
+            assert _window_hits(r, 1, every) == (r % every == 0)
+    assert _window_hits(0, 4, 10)        # round 0 always gates
+    assert _window_hits(8, 4, 10)        # [8, 12) contains 10
+    assert not _window_hits(11, 4, 10)   # [11, 15) misses 10 and 20
+    assert not _window_hits(1, 4, 0)     # 0 = disabled

@@ -84,10 +84,12 @@ def test_trainer_ssd_weight_sync():
 def test_adaptation_picks_from_grid():
     from repro.core import auto_tune
     tuned = auto_tune("pendulum", "sac", bs_grid=(32, 64),
-                      env_grid=(1, 2), iters=1)
+                      env_grid=(1, 2), rpd_grid=(1, 2), iters=1)
     assert tuned["batch_size"] in (32, 64)
     assert tuned["num_envs"] in (1, 2)
+    assert tuned["rounds_per_dispatch"] in (1, 2)
     assert len(tuned["bs_log"].candidates) >= 1
+    assert len(tuned["rpd_log"].candidates) >= 1
 
 
 def test_tune_geometric_stops_on_flat_curve():

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                    # optional dep (property fuzzing)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:             # deterministic fixed-seed fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.replay import buffer as rb
 from repro.replay import prioritized as per

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:                                    # optional dep (property fuzzing)
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:             # deterministic fixed-seed fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention

@@ -60,6 +60,21 @@ def test_sample_uniform_coverage():
     assert len(set(np.asarray(out["rew"]).tolist())) == 16
 
 
+def test_add_more_than_capacity_keeps_newest():
+    """Oversized writes match writing the same rows one at a time (no
+    winner-undefined duplicate ring indices)."""
+    st = rb.add_batch(_mk(8), _rows(3, base=0))
+    big = _rows(20, base=100)              # rew 100..119
+    st = rb.add_batch(st, big)
+    ref = rb.add_batch(_mk(8), _rows(3, base=0))
+    for i in range(20):
+        ref = rb.add_batch(ref, {k: v[i:i + 1] for k, v in big.items()})
+    assert int(st.ptr) == int(ref.ptr) == (3 + 20) % 8
+    assert int(st.size) == int(ref.size) == 8
+    np.testing.assert_allclose(np.asarray(st.data["rew"]),
+                               np.asarray(ref.data["rew"]))
+
+
 def test_donated_add_is_stable_under_jit():
     st = _mk(16)
     for i in range(10):

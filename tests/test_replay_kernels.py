@@ -1,0 +1,101 @@
+"""Pallas replay-ring kernels vs their jnp oracles (interpret mode),
+including the wraparound case, plus the buffer/PER use_pallas paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import replay_ops as rops
+from repro.kernels.ops import use_pallas
+from repro.replay import buffer as rb
+from repro.replay import prioritized as per
+
+
+@pytest.mark.parametrize("cap,n,ptr", [
+    (8, 3, 0),        # plain append
+    (8, 6, 5),        # wraps past capacity
+    (8, 8, 7),        # full-capacity write, wraps
+    (16, 5, 13),      # wraps by a few rows
+])
+@pytest.mark.parametrize("row", [(), (3,), (2, 2)])
+def test_ring_write_matches_oracle(cap, n, ptr, row):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(cap * n + ptr))
+    data = jax.random.normal(k1, (cap,) + row)
+    batch = jax.random.normal(k2, (n,) + row)
+    out = rops.ring_write(data, batch, jnp.asarray(ptr, jnp.int32))
+    want = rops.ring_write_ref(data, batch, ptr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+
+def test_ring_write_rejects_oversized_batch():
+    with pytest.raises(ValueError):
+        rops.ring_write(jnp.zeros((4, 2)), jnp.zeros((5, 2)), 0)
+
+
+@pytest.mark.parametrize("row", [(), (3,), (2, 2)])
+def test_ring_gather_matches_oracle(row):
+    data = jax.random.normal(jax.random.PRNGKey(0), (16,) + row)
+    idx = jnp.asarray([0, 15, 3, 3, 7, 1], jnp.int32)   # repeats allowed
+    out = rops.ring_gather(data, idx)
+    want = rops.ring_gather_ref(data, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+
+def _rows(n, base=0.0):
+    return {"obs": jnp.full((n, 2), base),
+            "act": jnp.full((n, 1), base + 0.5),
+            "rew": jnp.arange(n, dtype=jnp.float32) + base,
+            "next_obs": jnp.full((n, 2), base + 1),
+            "done": jnp.zeros((n,))}
+
+
+def test_buffer_pallas_path_matches_jnp():
+    specs = rb.specs_for_env(2, 1)
+    st_j, st_p = rb.init_replay(8, specs), rb.init_replay(8, specs)
+    st_j = rb.add_batch(rb.add_batch(st_j, _rows(6)), _rows(5, base=100))
+    with use_pallas():
+        st_p = rb.add_batch(rb.add_batch(st_p, _rows(6)),
+                            _rows(5, base=100))
+    assert int(st_j.ptr) == int(st_p.ptr)
+    assert int(st_j.size) == int(st_p.size)
+    for k in st_j.data:
+        np.testing.assert_allclose(np.asarray(st_j.data[k]),
+                                   np.asarray(st_p.data[k]))
+    key = jax.random.PRNGKey(1)
+    out_j = rb.sample(st_j, key, 16)
+    with use_pallas():
+        out_p = rb.sample(st_p, key, 16)
+    for k in out_j:
+        np.testing.assert_allclose(np.asarray(out_j[k]),
+                                   np.asarray(out_p[k]))
+
+
+def test_add_batch_jit_retraces_on_pallas_toggle():
+    """The donated jit wrapper is keyed on the use_pallas switch, so
+    flipping it after a first trace must not reuse the cached path."""
+    st = rb.add_batch_jit(rb.init_replay(8, rb.specs_for_env(2, 1)),
+                          _rows(3))
+    with use_pallas():
+        st = rb.add_batch_jit(st, _rows(3, base=10))
+    # both switch states hold a cache entry (the bool key caps it at 2)
+    assert rb._add_batch_jit.cache_info().currsize == 2
+    assert int(st.size) == 6
+
+
+def test_prioritized_pallas_path_matches_jnp():
+    specs = rb.specs_for_env(2, 1)
+    st_j, st_p = per.init_prioritized(8, specs), per.init_prioritized(8, specs)
+    st_j = per.add_batch(per.add_batch(st_j, _rows(6)), _rows(5, base=50))
+    with use_pallas():
+        st_p = per.add_batch(per.add_batch(st_p, _rows(6)),
+                             _rows(5, base=50))
+    np.testing.assert_allclose(np.asarray(st_j.priorities),
+                               np.asarray(st_p.priorities))
+    key = jax.random.PRNGKey(2)
+    b_j, i_j, w_j = per.sample(st_j, key, 4)
+    with use_pallas():
+        b_p, i_p, w_p = per.sample(st_p, key, 4)
+    np.testing.assert_array_equal(np.asarray(i_j), np.asarray(i_p))
+    np.testing.assert_allclose(np.asarray(w_j), np.asarray(w_p))
+    for k in b_j:
+        np.testing.assert_allclose(np.asarray(b_j[k]), np.asarray(b_p[k]))

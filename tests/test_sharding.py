@@ -19,7 +19,10 @@ from jax.sharding import AbstractMesh
 
 def FakeMesh(shape: dict):
     """Abstract (device-less) mesh for rule-resolution tests."""
-    return AbstractMesh(tuple(shape.values()), tuple(shape.keys()))
+    try:
+        return AbstractMesh(tuple(shape.values()), tuple(shape.keys()))
+    except TypeError:   # older jax: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(shape.items()))
 
 
 def _rules(pod=False):
