@@ -15,6 +15,18 @@ neutral there — the win is wherever host re-entry bounds the Hz
 window and run ``--repeats`` times (median reported): this container's
 CPU is noisy.
 
+A second comparison runs in a child process under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``: the same probe
+on a (2, 4) ``ac x batch`` mesh (paper Fig. 2b placement — Q ensemble
+sharded over ``ac``, replay rows over ``batch``) vs replicated
+single-device dispatch in the same 8-device process. The child process
+keeps the original arms' 1-device environment untouched, so the fused
+rounds/s entry stays comparable across PRs. On emulated host-CPU
+devices the sharded arm pays real cross-"device" copies for tiny
+compute, so it is expected to trail the replicated arm here; the entry
+records the dispatch overhead of the sharded program, not a GPU/TPU
+speedup.
+
 Run: ``PYTHONPATH=src python -m benchmarks.bench_pipeline [--seconds S]``.
 """
 from __future__ import annotations
@@ -22,6 +34,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 
 from benchmarks.common import emit
 from repro.core import SpreezeConfig, SpreezeTrainer
@@ -30,12 +44,13 @@ from repro.rl.base import AlgoHP
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_arm(fused: bool, seconds: float, rpd: int, repeats: int) -> dict:
+def run_arm(fused: bool, seconds: float, rpd: int, repeats: int,
+            mesh=None) -> dict:
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=1, batch_size=32,
         chunk_len=1, updates_per_round=1, warmup_frames=64,
         replay_capacity=4096, eval_every_rounds=10**9,
-        rounds_per_dispatch=rpd, fused=fused,
+        rounds_per_dispatch=rpd, fused=fused, mesh=mesh,
         hp=AlgoHP(algo="sac", hidden=(32, 32)))
     tr = SpreezeTrainer(cfg)
     # warm pass: one dispatch through each compiled path, so the timed
@@ -56,8 +71,67 @@ def run_arm(fused: bool, seconds: float, rpd: int, repeats: int) -> dict:
             "update_frame_hz": round(hist.update_frame_hz, 1)}
 
 
+def sharded_child(seconds: float, rpd: int, repeats: int, out: str):
+    """Child-process entry (8 forced host devices): sharded mesh arm vs
+    replicated single-device arm, dumped to ``out`` as JSON."""
+    import jax
+
+    from repro.launch.mesh import make_ac_mesh
+
+    mesh = make_ac_mesh(2, 4)
+    sharded = run_arm(True, seconds, rpd, repeats, mesh=mesh)
+    replicated = run_arm(True, seconds, rpd, repeats)
+    ratio = sharded["rounds_per_s"] / max(replicated["rounds_per_s"], 1e-9)
+    rec = {"devices": len(jax.devices()), "mesh": "ac2xbatch4",
+           "placement": "ac", "sharded": sharded,
+           "replicated": replicated,
+           "sharded_over_replicated_rounds_per_s": round(ratio, 3)}
+    with open(out, "w") as f:
+        json.dump(rec, f)
+
+
+def _xla_flags_force_devices(n: int) -> str:
+    """Inherited XLA_FLAGS with the host device count forced to ``n``
+    (user tuning flags survive, so parent and child arms stay
+    comparable)."""
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    return " ".join(flags)
+
+
+def run_sharded_comparison(seconds: float, rpd: int, repeats: int) -> dict:
+    """Spawn the 8-device child (XLA_FLAGS must precede jax init there)."""
+    import tempfile
+
+    out = os.path.join(tempfile.mkdtemp(prefix="spreeze_bench_"),
+                       "sharded.json")
+    pypath = os.pathsep.join(
+        p for p in (os.path.join(ROOT, "src"),
+                    os.environ.get("PYTHONPATH", "")) if p)
+    env = dict(os.environ, PYTHONPATH=pypath,
+               XLA_FLAGS=_xla_flags_force_devices(8))
+    # 2 arms x (warmup + repeats) timed windows + 8-device compile slack
+    budget = max(1200, int(2 * (repeats + 1) * seconds) + 600)
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_pipeline",
+             "--sharded-child", out, "--seconds", str(seconds),
+             "--rpd", str(rpd), "--repeats", str(repeats)],
+            env=env, cwd=ROOT, capture_output=True, text=True,
+            timeout=budget)
+    except subprocess.TimeoutExpired:
+        # still record the already-measured fused/unfused arms
+        return {"error": f"sharded child timed out after {budget}s"}
+    if r.returncode != 0:
+        return {"error": (r.stderr or r.stdout)[-2000:]}
+    with open(out) as f:
+        return json.load(f)
+
+
 def main(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,
-         out: str = os.path.join(ROOT, "BENCH_pipeline.json")) -> dict:
+         out: str = os.path.join(ROOT, "BENCH_pipeline.json"),
+         sharded: bool = True) -> dict:
     unfused = run_arm(False, seconds, rpd, repeats)
     fused = run_arm(True, seconds, rpd, repeats)
     speedup = fused["rounds_per_s"] / max(unfused["rounds_per_s"], 1e-9)
@@ -67,6 +141,14 @@ def main(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,
     report = {"env": "pendulum", "algo": "sac", "seconds_per_arm": seconds,
               "unfused": unfused, "fused": fused,
               "fused_over_unfused_rounds_per_s": round(speedup, 3)}
+    if sharded:
+        comp = run_sharded_comparison(seconds, rpd, repeats)
+        report["sharded_comparison"] = comp
+        if "error" not in comp:
+            emit("pipeline", "sharded", **comp["sharded"])
+            emit("pipeline", "replicated", **comp["replicated"])
+            emit("pipeline", "sharded_ratio", rounds_per_s_ratio=comp[
+                "sharded_over_replicated_rounds_per_s"])
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -81,5 +163,14 @@ if __name__ == "__main__":
                     help="rounds_per_dispatch for the fused arm")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repeats per arm (median reported)")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the 8-device sharded-vs-replicated child")
+    ap.add_argument("--sharded-child", default=None, metavar="OUT",
+                    help=argparse.SUPPRESS)   # internal child-process mode
     args = ap.parse_args()
-    main(seconds=args.seconds, rpd=args.rpd, repeats=args.repeats)
+    if args.sharded_child:
+        sharded_child(args.seconds, args.rpd, args.repeats,
+                      args.sharded_child)
+    else:
+        main(seconds=args.seconds, rpd=args.rpd, repeats=args.repeats,
+             sharded=not args.no_sharded)

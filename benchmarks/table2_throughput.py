@@ -27,7 +27,8 @@ CONFIGS = [
 
 
 def run_config(name, batch_size, num_envs, transfer, queue_size,
-               prioritized, rounds_per_dispatch, seconds: float):
+               prioritized, rounds_per_dispatch, seconds: float,
+               mesh=None, placement: str = "ac"):
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=num_envs,
         batch_size=batch_size, chunk_len=16, updates_per_round=4,
@@ -35,6 +36,7 @@ def run_config(name, batch_size, num_envs, transfer, queue_size,
         transfer=transfer, queue_size=queue_size or 20000,
         prioritized=prioritized,
         rounds_per_dispatch=rounds_per_dispatch,
+        mesh=mesh, placement=placement,
         fused=False if (transfer == "shared"
                         and rounds_per_dispatch == 1) else None)
     tr = SpreezeTrainer(cfg)
@@ -49,12 +51,27 @@ def run_config(name, batch_size, num_envs, transfer, queue_size,
              hist.transfer_stats["transmission_loss"], 3))
 
 
-def main(seconds: float = 12.0):
+def main(seconds: float = 12.0, mesh_arg: str = None):
     for row in CONFIGS:
         run_config(*row, seconds=seconds)
+    if mesh_arg:
+        # sharded megastep rows (paper Fig. 2b vs 2a on the same mesh);
+        # needs ac*batch devices (XLA_FLAGS forces them on host CPU)
+        from repro.launch.mesh import parse_ac_mesh
+        mesh = parse_ac_mesh(mesh_arg)
+        for placement in ("ac", "dp"):
+            run_config(f"spreeze-mesh-{placement}", 8192, 16, "shared", 0,
+                       False, 4, seconds=seconds, mesh=mesh,
+                       placement=placement)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--seconds", type=float, default=12.0)
-    main(ap.parse_args().seconds)
+    ap.add_argument("--mesh", default=None, metavar="ACxBATCH",
+                    help="also run the sharded megastep rows on an "
+                         "(ac, batch) mesh, e.g. '2x4' (force host "
+                         "devices with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N)")
+    args = ap.parse_args()
+    main(args.seconds, args.mesh)

@@ -15,11 +15,16 @@ from repro.core import auto_tune
 from repro.core.adaptation import tune_batch_size, tune_num_envs
 
 
-def main(iters: int = 3):
+def main(iters: int = 3, mesh_arg: str = None):
+    mesh = None
+    if mesh_arg:
+        # tune the fusion factor on the mesh it will actually run on
+        from repro.launch.mesh import parse_ac_mesh
+        mesh = parse_ac_mesh(mesh_arg)
     tuned = auto_tune("pendulum", "sac",
                       bs_grid=(128, 512, 2048, 8192, 32768),
                       env_grid=(1, 2, 4, 8, 16, 32),
-                      rpd_grid=(1, 2, 4, 8), iters=iters)
+                      rpd_grid=(1, 2, 4, 8), iters=iters, mesh=mesh)
     for c in tuned["bs_log"].candidates:
         emit("table3/batch_size", f"bs{c['value']}",
              update_frame_hz=f"{c['throughput']:.4g}")
@@ -37,4 +42,8 @@ def main(iters: int = 3):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=3)
-    main(ap.parse_args().iters)
+    ap.add_argument("--mesh", default=None, metavar="ACxBATCH",
+                    help="probe rounds_per_dispatch on a sharded "
+                         "(ac, batch) megastep mesh, e.g. '2x4'")
+    args = ap.parse_args()
+    main(args.iters, args.mesh)

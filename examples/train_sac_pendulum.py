@@ -17,7 +17,28 @@ def main():
     ap.add_argument("--env", default="pendulum")
     ap.add_argument("--target", type=float, default=-200.0)
     ap.add_argument("--no-adapt", action="store_true")
+    ap.add_argument(
+        "--mesh", default=None, metavar="ACxBATCH",
+        help="run the megastep sharded over an (ac, batch) device mesh, "
+             "e.g. '2x4': the double-Q ensemble lands on the ac axis "
+             "(paper Fig. 2b dual-GPU split), replay rows shard over "
+             "batch. Needs ac*batch devices — on CPU force them with "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument(
+        "--placement", default="ac", choices=("ac", "dp"),
+        help="mesh placement: 'ac' = actor/critic model parallelism "
+             "(Fig. 2b), 'dp' = data-parallel baseline (Fig. 2a, "
+             "gradients all-reduce)")
+    ap.add_argument(
+        "--overlap-eval", action="store_true",
+        help="megastep emits a donated actor snapshot that eval/viz "
+             "consume without blocking the next dispatch")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_ac_mesh
+        mesh = parse_ac_mesh(args.mesh)
 
     if args.no_adapt:
         batch_size, num_envs = 2048, 8
@@ -27,7 +48,8 @@ def main():
         tuned = auto_tune(args.env, "sac",
                           bs_grid=(128, 512, 2048, 8192),
                           env_grid=(2, 4, 8, 16, 32),
-                          rpd_grid=(1, 2, 4, 8), iters=2)
+                          rpd_grid=(1, 2, 4, 8), iters=2,
+                          mesh=mesh, placement=args.placement)
         batch_size, num_envs = tuned["batch_size"], tuned["num_envs"]
         rpd = tuned["rounds_per_dispatch"]
         for c in tuned["bs_log"].candidates:
@@ -46,6 +68,8 @@ def main():
         env_name=args.env, algo="sac", num_envs=num_envs,
         batch_size=batch_size, updates_per_round=8,
         rounds_per_dispatch=rpd,
+        mesh=mesh, placement=args.placement,
+        overlap_eval=args.overlap_eval,
         weight_sync="ssd",          # eval reads .npz snapshots (paper §3.3.1)
         eval_every_rounds=25)
     trainer = SpreezeTrainer(cfg)

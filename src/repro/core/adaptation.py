@@ -109,20 +109,41 @@ def tune_rounds_per_dispatch(make_megastep_call: Callable[[int],
     return tune_geometric(measure, grid, min_gain=min_gain)
 
 
+def probe_replay(obs_dim: int, act_dim: int, cap: int, gamma: float, key
+                 ):
+    """Synthetic filled replay for the update-rate probe, with the SAME
+    field set and value domains the trainer feeds the real update graph:
+    the trainer always adds a ``"disc"`` row (so the timed HLO must not
+    take the ``batch.get("disc", ...)`` fallback path) and ``done`` is a
+    {0,1} indicator, not a normal sample."""
+    import jax.numpy as jnp
+
+    from repro.replay import buffer as rb
+
+    specs = rb.trainer_specs(obs_dim, act_dim)
+    fill = {k: jax.random.normal(jax.random.fold_in(key, i),
+                                 (cap,) + s).astype(d)
+            for i, (k, (s, d)) in enumerate(specs.items())}
+    fill["done"] = (fill["done"] > 0).astype(jnp.float32)
+    fill["disc"] = gamma * (1.0 - fill["done"])
+    return rb.ReplayState(data=fill, ptr=jnp.zeros((), jnp.int32),
+                          size=jnp.asarray(cap, jnp.int32))
+
+
 def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
               bs_grid: Sequence[int] = (128, 512, 2048, 8192, 32768),
               env_grid: Sequence[int] = (1, 2, 4, 8, 16, 32),
               rpd_grid: Sequence[int] = (1, 2, 4, 8),
-              iters: int = 3) -> Dict:
+              iters: int = 3, mesh=None, placement: str = "ac") -> Dict:
     """End-to-end adaptation for a SpreezeTrainer config (paper's auto mode).
 
     Returns {"batch_size", "num_envs", "rounds_per_dispatch", "bs_log",
     "env_log", "rpd_log"}. The searches are independent (paper §3.4.2) so
     they run sequentially; the dispatch-fusion search runs last, on a
-    trainer probe built with the tuned batch size and env count.
+    trainer probe built with the tuned batch size and env count — and on
+    ``mesh``/``placement`` when given, so the fusion factor is tuned on
+    the sharded megastep it will actually drive.
     """
-    import jax.numpy as jnp
-
     from repro.envs import base as env_base
     from repro.replay import buffer as rb
     from repro.rl.base import AlgoHP, get_algo
@@ -136,16 +157,8 @@ def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
     update = mod.make_update_step(hp, spec.obs_dim, spec.act_dim)
     act = mod.make_act(hp)
 
-    # synthetic filled replay for the update-rate probe
     cap = max(bs_grid) * 2
-    replay = rb.init_replay(cap, rb.specs_for_env(spec.obs_dim,
-                                                  spec.act_dim))
-    fill = {k: jax.random.normal(jax.random.fold_in(key, i),
-                                 (cap,) + s).astype(d)
-            for i, (k, (s, d)) in enumerate(
-                rb.specs_for_env(spec.obs_dim, spec.act_dim).items())}
-    replay = rb.ReplayState(data=fill, ptr=jnp.zeros((), jnp.int32),
-                            size=jnp.asarray(cap, jnp.int32))
+    replay = probe_replay(spec.obs_dim, spec.act_dim, cap, hp.gamma, key)
 
     def make_update_call(bs: int):
         step = jax.jit(lambda s, k: update(
@@ -198,7 +211,8 @@ def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
                             batch_size=bs, chunk_len=chunk_len,
                             replay_capacity=max(2 * bs, 4096),
                             warmup_frames=0, eval_every_rounds=10**9,
-                            rounds_per_dispatch=r)
+                            rounds_per_dispatch=r,
+                            mesh=mesh, placement=placement)
         tr = SpreezeTrainer(cfg)
 
         def call():

@@ -205,13 +205,20 @@ def _state_shardings_from_shapes(state: AlgoState, rules: MeshRules):
 # ---------------------------------------------------------------------------
 
 def make_arch_spreeze_losses(cfg: ModelConfig, act_dim: int = 16,
-                             dtype=jnp.bfloat16):
+                             dtype=jnp.bfloat16,
+                             hp: Optional[AlgoHP] = None):
     """Actor/critic loss fns whose towers are assigned-arch backbones.
 
     Used by the dry-run to prove the paper's technique composes with the
     large architectures: actor tower sharded over (data, model) within
     pod 0's groups, the two critic towers over the ``ac``(=pod) axis.
+
+    ``critic_loss`` mirrors ``rl/sac.py``: the TD target is built from
+    the *target* critic params and wrapped in ``stop_gradient`` so no
+    gradient flows through the bootstrap, with ``hp.gamma`` as the
+    discount.
     """
+    hp = hp or AlgoHP()
     def actor_loss(actor_params, q_params, tokens, key):
         mean, log_std = nets.arch_policy_dist(actor_params, tokens, cfg,
                                               dtype=dtype)
@@ -226,7 +233,8 @@ def make_arch_spreeze_losses(cfg: ModelConfig, act_dim: int = 16,
         )(q_params).min(axis=0)
         return jnp.mean(0.2 * logp - q)
 
-    def critic_loss(q_params, actor_params, tokens, act, rew, done, key):
+    def critic_loss(q_params, q_target_params, actor_params, tokens, act,
+                    rew, done, key):
         q_pred = jax.vmap(
             lambda qp: nets.arch_q_value(qp, tokens, act, cfg, dtype=dtype)
         )(q_params)
@@ -235,8 +243,31 @@ def make_arch_spreeze_losses(cfg: ModelConfig, act_dim: int = 16,
         a2 = jnp.tanh(mean)
         q_next = jax.vmap(
             lambda qp: nets.arch_q_value(qp, tokens, a2, cfg, dtype=dtype)
-        )(q_params).min(axis=0)
-        target = rew + 0.99 * (1 - done) * q_next
+        )(q_target_params).min(axis=0)
+        target = jax.lax.stop_gradient(
+            rew + hp.gamma * (1 - done) * q_next)
         return jnp.mean((q_pred - target[None]) ** 2)
 
     return actor_loss, critic_loss
+
+
+# ---------------------------------------------------------------------------
+# sharded-megastep specs: replay ring + env states on the trainer mesh
+# ---------------------------------------------------------------------------
+
+def replay_sharding(replay, rules: MeshRules):
+    """NamedSharding pytree for the replay ring: every (capacity, ...)
+    leaf shards its rows over the ``batch`` axis (each group owns a slice
+    of the pool; scatter/gather stay group-local under GSPMD), the ring
+    bookkeeping scalars replicate. Handles both the uniform
+    ``ReplayState`` and the PER ``PrioritizedState`` wrapper."""
+    from repro.replay.buffer import ReplayState
+    rep = NamedSharding(rules.mesh, P())
+    if hasattr(replay, "base"):            # PrioritizedState
+        from repro.replay.prioritized import PrioritizedState
+        return PrioritizedState(
+            base=replay_sharding(replay.base, rules),
+            priorities=NamedSharding(rules.mesh, P(rules.batch)),
+            max_priority=rep)
+    return ReplayState(data=batch_sharding(replay.data, rules),
+                       ptr=rep, size=rep)

@@ -33,6 +33,17 @@ path is only available on the shared-memory transfer in async mode; the
 ``queue`` baseline and ``sync_mode`` keep the eager per-round loop so
 the Fig. 4a ablation (and the dispatch-overhead comparison in
 ``benchmarks/bench_pipeline.py``) measure exactly what they did before.
+
+**Sharded megastep** (``mesh``/``placement``): with an ("ac", "batch")
+jax Mesh the megastep compiles under in/out shardings from
+``core.model_parallel`` — the double-Q ensemble axis on ``ac`` (paper
+§3.2.2 Fig. 2b: each group updates one Q tower, the only cross-group
+traffic is the (B,)-sized ``min(Q1,Q2)`` reduce), the replay ring's
+(capacity, ...) leaves on ``batch`` (scatter/gather stay group-local),
+the actor replicated. ``placement="dp"`` is the Fig. 2a data-parallel
+baseline. ``overlap_eval`` has the megastep emit a donated actor
+snapshot each dispatch so the eval/viz "processes" consume weights
+without pinning the training state the next dispatch donates.
 """
 from __future__ import annotations
 
@@ -45,8 +56,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import model_parallel as mp
 from repro.core.transfer import make_transfer
+from repro.distributed.sharding import trainer_rules, use_rules
 from repro.envs import base as env_base
 from repro.replay import buffer as rb
 from repro.rl.base import AlgoHP, get_algo
@@ -75,6 +89,15 @@ class SpreezeConfig:
     per_beta: float = 0.4
     nstep: int = 1                # n-step returns (APE-X uses 3)
     weight_sync: str = "live"     # live | ssd (paper's channel)
+    # multi-device megastep (paper §3.2.2, Fig. 2b/3): an ("ac","batch")
+    # jax Mesh — the double-Q ensemble shards over ``ac`` (each group
+    # updates one Q tower), the replay ring's rows over ``batch``, the
+    # actor replicates. None = the single-device megastep.
+    mesh: Optional[Any] = None
+    placement: str = "ac"         # ac (Fig. 2b) | dp (Fig. 2a baseline)
+    # megastep emits a donated actor snapshot each dispatch so eval/viz
+    # consume weights without pinning the donated training state
+    overlap_eval: bool = False
     # eval/vis "processes"
     eval_every_rounds: int = 50
     eval_episodes: int = 4
@@ -129,11 +152,16 @@ class SpreezeTrainer:
         self.transfer = make_transfer(cfg.transfer, cfg.queue_size)
 
         key = jax.random.PRNGKey(cfg.seed)
-        self.key, k_algo, k_env = jax.random.split(key, 3)
+        self.key, k_algo, k_env, k_io = jax.random.split(key, 4)
+        # dedicated eval/viz streams: each consumer folds round_i into its
+        # own parent key, so the two never collide with each other (viz at
+        # round r used to reuse eval's key from round r+7) or with the
+        # live training key
+        self._viz_key = jax.random.fold_in(k_io, 0)
+        self._eval_key = jax.random.fold_in(k_io, 1)
         self.state = self.algo.init_state(k_algo, spec.obs_dim, spec.act_dim,
                                           self.hp)
-        specs = rb.specs_for_env(spec.obs_dim, spec.act_dim)
-        specs["disc"] = ((), jnp.float32)   # gamma^k(1-done) per row
+        specs = rb.trainer_specs(spec.obs_dim, spec.act_dim)
         if cfg.prioritized:
             from repro.replay import prioritized as per
             if cfg.transfer != "shared":
@@ -152,11 +180,47 @@ class SpreezeTrainer:
             raise ValueError("fused megastep requires the shared-memory "
                              "transfer path and async mode (sync_mode and "
                              "the queue baseline stay on the eager loop)")
+        if cfg.mesh is not None:
+            self._check_mesh()
+        if cfg.overlap_eval and not self.use_fused:
+            raise ValueError("overlap_eval snapshots are emitted by the "
+                             "fused megastep; the eager loop's live "
+                             "weights already overlap")
 
         self._build_compiled()
+        if cfg.mesh is not None:
+            # land every carried pytree on its mesh sharding up front so
+            # the first megastep donates in place instead of resharding
+            self.state = jax.device_put(self.state, self._state_sharding)
+            self.replay = jax.device_put(self.replay,
+                                         self._replay_sharding)
+            self.env_states = jax.device_put(self.env_states,
+                                             self._env_sharding)
         self.total_frames = 0
         self.total_updates = 0
         self.last_metrics = None     # stacked (R,) arrays per megastep
+
+    def _check_mesh(self):
+        cfg = self.cfg
+        if not self.use_fused:
+            raise ValueError("the multi-device megastep needs the fused "
+                             "path (shared transfer, async mode)")
+        names = getattr(cfg.mesh, "axis_names", ())
+        if not {"ac", "batch"} <= set(names):
+            raise ValueError(f"trainer mesh needs ('ac','batch') axes, "
+                             f"got {names}")
+        n_q = jax.tree.leaves(self.state.q)[0].shape[0]
+        if cfg.placement == "ac" and n_q % cfg.mesh.shape["ac"]:
+            raise ValueError(f"ac axis size {cfg.mesh.shape['ac']} must "
+                             f"divide the Q ensemble size {n_q} "
+                             f"(algo {cfg.algo!r})")
+        rows = self._rules().axis_size(self._rules().batch)
+        if cfg.replay_capacity % rows:
+            raise ValueError(f"replay_capacity {cfg.replay_capacity} must "
+                             f"be divisible by the batch-axis size {rows}")
+
+    def _rules(self):
+        return trainer_rules(self.cfg.mesh, self.cfg.placement)
 
     # ------------------------------------------------------------------ #
     # compiled "processes"
@@ -184,11 +248,14 @@ class SpreezeTrainer:
 
             (states, key), exps = jax.lax.scan(
                 step, (states, key), None, length=cfg.chunk_len)
+            # metric from the RAW per-step rewards: after nstep_chunk the
+            # rows carry n-step accumulated returns (~n x inflated)
+            mrew = exps["rew"].mean()
             from repro.replay.nstep import nstep_chunk
             exps = nstep_chunk(exps, cfg.nstep, hp.gamma)
             flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in
                     exps.items()}
-            return states, flat, key, exps["rew"].mean()
+            return states, flat, key, mrew
 
         if cfg.prioritized:
             from repro.replay import prioritized as per
@@ -265,11 +332,16 @@ class SpreezeTrainer:
         else:
             push = rb.add_batch
 
+        rules = self._rules() if cfg.mesh is not None else None
+
         def make_megastep(rounds: int):
             """One XLA program for ``rounds`` iterations of
             {sampler chunk -> ring write -> K update steps}: the host
             enqueues one dispatch per R rounds instead of ~6 Python->
-            device transitions per round."""
+            device transitions per round. With ``cfg.mesh`` the program
+            is built with in/out shardings from ``model_parallel``: the
+            double-Q ensemble over ``ac``, the replay rows over
+            ``batch``, the actor replicated (paper Fig. 2b)."""
 
             def megastep(state, replay, env_states, key):
                 def one_round(carry, _):
@@ -285,11 +357,37 @@ class SpreezeTrainer:
                     jax.lax.scan(one_round,
                                  (state, replay, env_states, key),
                                  None, length=rounds)
-                return state, replay, env_states, key, {
-                    "mean_rew": rews, "critic_loss": closs}
+                metrics = {"mean_rew": rews, "critic_loss": closs}
+                if cfg.overlap_eval:
+                    # fresh buffers eval can own: the next dispatch then
+                    # donates ``state`` without waiting on eval
+                    metrics["actor_snapshot"] = jax.tree.map(
+                        jnp.copy, state.actor)
+                return state, replay, env_states, key, metrics
 
-            return jax.jit(megastep, donate_argnums=(0, 1, 2))
+            if rules is None:
+                return jax.jit(megastep, donate_argnums=(0, 1, 2))
 
+            def sharded_megastep(state, replay, env_states, key):
+                with use_rules(rules):      # active while jit traces
+                    return megastep(state, replay, env_states, key)
+
+            rep = NamedSharding(cfg.mesh, P())
+            metrics_sh = {"mean_rew": rep, "critic_loss": rep}
+            if cfg.overlap_eval:
+                metrics_sh["actor_snapshot"] = mp.replicated_sharding(
+                    self.state.actor, rules)
+            in_sh = (self._state_sharding, self._replay_sharding,
+                     self._env_sharding, rep)
+            return jax.jit(sharded_megastep, donate_argnums=(0, 1, 2),
+                           in_shardings=in_sh,
+                           out_shardings=in_sh + (metrics_sh,))
+
+        if rules is not None:
+            self._state_sharding = mp.algo_state_sharding(self.state, rules)
+            self._replay_sharding = mp.replay_sharding(self.replay, rules)
+            self._env_sharding = mp.replicated_sharding(self.env_states,
+                                                        rules)
         self._viz = jax.jit(viz_episode)
         self._sampler = jax.jit(sampler_chunk, donate_argnums=(1,))
         self._update_round = jax.jit(update_round, donate_argnums=(0, 1))
@@ -301,15 +399,21 @@ class SpreezeTrainer:
     # weight sync to the eval/vis "processes"
     # ------------------------------------------------------------------ #
     def _actor_for_eval(self):
+        # overlap_eval: the megastep emitted a private actor copy; eval
+        # consumes it while the next dispatch donates the live state
+        actor = self.state.actor
+        if (self.cfg.overlap_eval and self.last_metrics is not None
+                and "actor_snapshot" in self.last_metrics):
+            actor = self.last_metrics["actor_snapshot"]
         if self.cfg.weight_sync == "live":
-            return self.state.actor                    # zero-copy
+            return actor                               # zero-copy
         # SSD path: write-then-read .npz (atomic, as the paper requires)
         path = getattr(self, "_ssd_path", None)
         if path is None:
             d = tempfile.mkdtemp(prefix="spreeze_ssd_")
             path = self._ssd_path = os.path.join(d, "actor.npz")
-        checkpoint.save(path, self.state.actor)
-        actor, _ = checkpoint.restore(path, self.state.actor)
+        checkpoint.save(path, actor)
+        actor, _ = checkpoint.restore(path, actor)
         return actor
 
     # ------------------------------------------------------------------ #
@@ -317,15 +421,29 @@ class SpreezeTrainer:
     # ------------------------------------------------------------------ #
     def _warmup(self):
         """Fill the pool with random-policy experience (eager path)."""
+        import contextlib
         cfg = self.cfg
         frames_per_chunk = cfg.num_envs * cfg.chunk_len
-        while self.total_frames < cfg.warmup_frames:
-            self.env_states, exp, self.key, _ = self._sampler(
-                self.state.actor, self.env_states, self.key)
-            self.replay = self.transfer.push(self.replay, exp)
-            self.replay = self.transfer.flush(self.replay)
-            self.total_frames += frames_per_chunk
+        # trace the eager ring writes under the trainer rules too, so the
+        # Pallas fallback sees the mesh (the sharded pool must not go
+        # through the single-device ring kernel)
+        rules_ctx = (use_rules(self._rules()) if cfg.mesh is not None
+                     else contextlib.nullcontext())
+        with rules_ctx:
+            while self.total_frames < cfg.warmup_frames:
+                self.env_states, exp, self.key, _ = self._sampler(
+                    self.state.actor, self.env_states, self.key)
+                self.replay = self.transfer.push(self.replay, exp)
+                self.replay = self.transfer.flush(self.replay)
+                self.total_frames += frames_per_chunk
         self.replay = self.transfer.flush(self.replay, force=True)
+        if self.cfg.mesh is not None:
+            # warmup runs eager jits with inferred shardings; land the
+            # carries back on the megastep's exact specs before dispatch
+            self.replay = jax.device_put(self.replay,
+                                         self._replay_sharding)
+            self.env_states = jax.device_put(self.env_states,
+                                             self._env_sharding)
         jax.block_until_ready(jax.tree.leaves(self.replay))
 
     def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
@@ -371,7 +489,7 @@ class SpreezeTrainer:
             if _window_hits(round_i, window, cfg.viz_every_rounds):
                 obs, act_tr, rew = self._viz(
                     self._actor_for_eval(),
-                    jax.random.fold_in(self.key, 7 + round_i))
+                    jax.random.fold_in(self._viz_key, round_i))
                 if cfg.viz_dir:
                     import numpy as np
                     os.makedirs(cfg.viz_dir, exist_ok=True)
@@ -381,8 +499,9 @@ class SpreezeTrainer:
                              rew=np.asarray(rew))
             # --- eval "process" -------------------------------------------
             if _window_hits(round_i, window, cfg.eval_every_rounds):
-                ret = float(self._eval(self._actor_for_eval(),
-                                       jax.random.fold_in(self.key, round_i)))
+                ret = float(self._eval(
+                    self._actor_for_eval(),
+                    jax.random.fold_in(self._eval_key, round_i)))
                 t = time.perf_counter() - t0
                 hist.record_eval(t, ret, self.total_frames,
                                  self.total_updates)

@@ -125,6 +125,25 @@ def spreeze_rules(mesh: Mesh, **kw) -> MeshRules:
     return replace(r, ac="pod" if "pod" in mesh.axis_names else None)
 
 
+def trainer_rules(mesh: Mesh, placement: str = "ac") -> MeshRules:
+    """Rules for the trainer's ("ac", "batch") megastep mesh.
+
+    placement="ac" (paper Fig. 2b): the double-Q ensemble dim maps to the
+    ``ac`` mesh axis (each group owns one Q tower) and replay rows shard
+    over ``batch``. placement="dp" (Fig. 2a baseline): no ensemble axis —
+    params replicated, rows sharded over every mesh axis (gradients
+    all-reduce across groups)."""
+    names = mesh.axis_names
+    if placement == "dp":
+        batch = tuple(a for a in ("ac", "batch") if a in names) or names
+        return MeshRules(mesh=mesh, batch=batch, ac=None)
+    if placement != "ac":
+        raise ValueError(f"unknown placement {placement!r} (want ac|dp)")
+    return MeshRules(mesh=mesh,
+                     batch=("batch",) if "batch" in names else None,
+                     ac="ac" if "ac" in names else None)
+
+
 # ---------------------------------------------------------------------------
 # activation / param annotation
 # ---------------------------------------------------------------------------

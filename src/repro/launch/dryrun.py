@@ -334,17 +334,18 @@ def lower_spreeze_arch(arch: str, *, batch: int = 32, seq: int = 1024,
         v_sh = NamedSharding(mesh, P("data"))
         rep = NamedSharding(mesh, P())
 
-        def update(actor, critics, tokens, act, rew, done, key):
+        def update(actor, critics, critics_tgt, tokens, act, rew, done,
+                   key):
             with use_rules(rules):
-                cg = jax.grad(critic_loss)(critics, actor, tokens, act,
-                                           rew, done, key)
+                cg = jax.grad(critic_loss)(critics, critics_tgt, actor,
+                                           tokens, act, rew, done, key)
                 ag = jax.grad(actor_loss)(actor, critics, tokens, key)
             return cg, ag
 
         lowered = jax.jit(update, in_shardings=(
-            a_sh, c_sh, t_sh, NamedSharding(mesh, P("data", None)),
-            v_sh, v_sh, rep)).lower(actor, critics, tokens, act, rew,
-                                    done, key)
+            a_sh, c_sh, c_sh, t_sh, NamedSharding(mesh, P("data", None)),
+            v_sh, v_sh, rep)).lower(actor, critics, critics, tokens, act,
+                                    rew, done, key)
         compiled = lowered.compile()
 
     cost = analysis.cost_dict(compiled)

@@ -35,6 +35,36 @@ def make_production_mesh(*, multi_pod: bool = False,
     return jax.make_mesh(shape, axes, devices=devs[:need])
 
 
+def make_ac_mesh(ac: int = 2, batch: int = 0) -> Mesh:
+    """(ac, batch) mesh for the sharded trainer megastep: the ``ac`` axis
+    carries the double-Q ensemble (paper Fig. 2b dual-GPU split), the
+    ``batch`` axis the replay rows. ``batch=0`` takes every remaining
+    device. Host-CPU testing: force devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    devs = jax.devices()
+    if batch <= 0:
+        batch = max(1, len(devs) // ac)
+    need = ac * batch
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for an {ac}x{batch} ac mesh, found "
+            f"{len(devs)}; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    return jax.make_mesh((ac, batch), ("ac", "batch"), devices=devs[:need])
+
+
+def parse_ac_mesh(spec: str) -> Mesh:
+    """CLI 'ACxBATCH' spec (e.g. '2x4') -> the ac mesh. Shared by the
+    example driver and the table2/table3 benchmarks."""
+    try:
+        ac, batch = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"bad mesh spec {spec!r}: want 'ACxBATCH', e.g. '2x4'") \
+            from None
+    return make_ac_mesh(ac, batch)
+
+
 def make_debug_mesh(data: int = 1, model: int = 1) -> Optional[Mesh]:
     """Small mesh over however many devices exist (tests)."""
     n = data * model

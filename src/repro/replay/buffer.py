@@ -18,8 +18,15 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import current_rules, shard
 from repro.kernels import ops as kops
+
+
+def _use_pallas_ring() -> bool:
+    """The Pallas ring kernels are single-device programs; under active
+    mesh rules (the sharded megastep) the jnp scatter/gather forms let
+    GSPMD keep the ring ops group-local instead."""
+    return kops.pallas_enabled() and not current_rules().active
 
 
 class ReplayState(NamedTuple):
@@ -45,6 +52,16 @@ def specs_for_env(obs_dim: int, act_dim: int):
             "done": ((), f32)}
 
 
+def trainer_specs(obs_dim: int, act_dim: int):
+    """The field set the trainer actually writes: env fields plus the
+    ``"disc"`` row (gamma^k(1-done), added by the n-step transform).
+    Single source of truth for the pipeline AND the adaptation probe —
+    if they drift, ``auto_tune`` times the wrong update HLO."""
+    specs = dict(specs_for_env(obs_dim, act_dim))
+    specs["disc"] = ((), jnp.float32)
+    return specs
+
+
 def write_plan(ptr, n: int, cap: int):
     """Ring slots for an n-row write: (ptr0, keep) — slot of the first
     surviving row and how many of the *newest* rows survive. Writes
@@ -60,7 +77,7 @@ def write_plan(ptr, n: int, cap: int):
 def scatter_rows(dest: jax.Array, rows: jax.Array, ptr0) -> jax.Array:
     """dest[(ptr0 + i) % cap] = rows via the Pallas ring kernel or the
     jnp scatter, per the ``use_pallas`` switch (read at trace time)."""
-    if kops.pallas_enabled():
+    if _use_pallas_ring():
         return kops.ring_write(dest, rows, ptr0)
     idx = (ptr0 + jnp.arange(rows.shape[0])) % dest.shape[0]
     return dest.at[idx].set(rows.astype(dest.dtype))
@@ -69,7 +86,7 @@ def scatter_rows(dest: jax.Array, rows: jax.Array, ptr0) -> jax.Array:
 def gather_rows(data: jax.Array, idx: jax.Array) -> jax.Array:
     """data[idx] via the Pallas ring kernel or jnp.take, per the
     ``use_pallas`` switch (read at trace time)."""
-    if kops.pallas_enabled():
+    if _use_pallas_ring():
         return kops.ring_gather(data, idx)
     return jnp.take(data, idx, axis=0)
 
@@ -84,7 +101,10 @@ def add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayState:
     ptr0, keep = write_plan(state.ptr, n, cap)
     if keep < n:
         batch = {k: v[n - keep:] for k, v in batch.items()}
-    data = {k: scatter_rows(state.data[k], batch[k], ptr0)
+    # pin the ring leaves to the batch axis so GSPMD never un-shards the
+    # pool across a megastep's scan carries (no-op without active rules)
+    data = {k: shard(scatter_rows(state.data[k], batch[k], ptr0),
+                     *(("batch",) + (None,) * (state.data[k].ndim - 1)))
             for k in state.data}
     return ReplayState(data=data,
                        ptr=(state.ptr + n) % cap,
@@ -103,18 +123,32 @@ def sample(state: ReplayState, key, batch_size: int) -> Dict[str, jax.Array]:
 
 
 def _pallas_keyed_jit(fn):
-    """Donated-jit factory keyed on the use_pallas switch: the contextvar
-    is read at trace time, so a shared jit cache would otherwise pin
-    whichever path was traced first for a given shape."""
+    """Donated-jit factory keyed on the trace-time context (use_pallas
+    switch + active mesh rules — see ``_ring_trace_key``): both steer
+    what gets baked into the trace (kernel choice, sharding
+    constraints), so a shared jit cache would otherwise pin whichever
+    context was traced first for a given shape. Each entry wraps a
+    FRESH function object: jax's lowering cache keys on function
+    identity + avals and cannot see our contextvars, so distinct jit
+    wrappers around the same ``fn`` would still share one trace."""
     return functools.lru_cache(maxsize=None)(
-        lambda pallas: functools.partial(jax.jit, donate_argnums=(0,))(fn))
+        lambda key: functools.partial(jax.jit, donate_argnums=(0,))(
+            functools.wraps(fn)(lambda *a, **kw: fn(*a, **kw))))
+
+
+def _ring_trace_key():
+    """Everything ``add_batch`` reads from context at trace time: the
+    Pallas switch and the mesh rules (whose ``shard`` constraints would
+    otherwise leak across trainers — e.g. commit a meshless trainer's
+    replay onto another trainer's mesh)."""
+    return (_use_pallas_ring(), current_rules())
 
 
 _add_batch_jit = _pallas_keyed_jit(add_batch)
 
 
 def add_batch_jit(state: ReplayState, batch) -> ReplayState:
-    return _add_batch_jit(kops.pallas_enabled())(state, batch)
+    return _add_batch_jit(_ring_trace_key())(state, batch)
 
 
 def sample_jit(batch_size: int):

@@ -20,6 +20,7 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import shard
 from repro.kernels import ops as kops
 from repro.replay.buffer import (ReplayState, _pallas_keyed_jit,
                                  gather_rows, init_replay, scatter_rows,
@@ -47,8 +48,10 @@ def add_batch(state: PrioritizedState, batch: Dict[str, jax.Array]
     cap = state.priorities.shape[0]
     # same ring slots as base_add's data write, incl. oversized-write drop
     ptr0, keep = write_plan(state.base.ptr, n, cap)
-    pri = scatter_rows(state.priorities,
-                       jnp.broadcast_to(state.max_priority, (keep,)), ptr0)
+    # priorities live row-aligned with the data: same batch-axis shard
+    pri = shard(scatter_rows(state.priorities,
+                             jnp.broadcast_to(state.max_priority, (keep,)),
+                             ptr0), "batch")
     return PrioritizedState(base=base_add(state.base, batch),
                             priorities=pri,
                             max_priority=state.max_priority)
@@ -82,7 +85,7 @@ def update_priorities(state: PrioritizedState, idx, td_errors,
                       eps: float = 1e-3) -> PrioritizedState:
     """Set sampled rows' priorities to |TD error| + eps (PER eq. 1)."""
     pri_new = jnp.abs(td_errors) + eps
-    pri = state.priorities.at[idx].set(pri_new)
+    pri = shard(state.priorities.at[idx].set(pri_new), "batch")
     return PrioritizedState(
         base=state.base, priorities=pri,
         max_priority=jnp.maximum(state.max_priority, jnp.max(pri_new)))
@@ -92,4 +95,5 @@ _add_batch_jit = _pallas_keyed_jit(add_batch)
 
 
 def add_batch_jit(state: PrioritizedState, batch) -> PrioritizedState:
-    return _add_batch_jit(kops.pallas_enabled())(state, batch)
+    from repro.replay.buffer import _ring_trace_key
+    return _add_batch_jit(_ring_trace_key())(state, batch)

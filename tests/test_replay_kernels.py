@@ -71,13 +71,15 @@ def test_buffer_pallas_path_matches_jnp():
 
 
 def test_add_batch_jit_retraces_on_pallas_toggle():
-    """The donated jit wrapper is keyed on the use_pallas switch, so
-    flipping it after a first trace must not reuse the cached path."""
+    """The donated jit wrapper is keyed on the trace-time context
+    (use_pallas switch + mesh rules), so flipping the switch after a
+    first trace must not reuse the cached path."""
+    rb._add_batch_jit.cache_clear()   # other tests may hold mesh keys
     st = rb.add_batch_jit(rb.init_replay(8, rb.specs_for_env(2, 1)),
                           _rows(3))
     with use_pallas():
         st = rb.add_batch_jit(st, _rows(3, base=10))
-    # both switch states hold a cache entry (the bool key caps it at 2)
+    # each switch state holds its own cache entry
     assert rb._add_batch_jit.cache_info().currsize == 2
     assert int(st.size) == 6
 
