@@ -27,6 +27,15 @@ compute, so it is expected to trail the replicated arm here; the entry
 records the dispatch overhead of the sharded program, not a GPU/TPU
 speedup.
 
+Comparability note: PR 3 switched the repo to partitionable threefry
+(``repro/__init__.py`` — jax.random draws must not change value with
+tensor layout, or the mesh-native replay kernels can't be verified
+against their oracles). Partitionable bit generation costs ~15-20% more
+host-CPU time than the legacy impl on this dispatch-bound probe (tiny
+nets make RNG a visible fraction; on TPU with production nets it is
+noise), so absolute Hz across that boundary aren't comparable — the
+fused/unfused RATIO is the stable signal and is unchanged (~3.3x).
+
 Run: ``PYTHONPATH=src python -m benchmarks.bench_pipeline [--seconds S]``.
 """
 from __future__ import annotations

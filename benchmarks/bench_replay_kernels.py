@@ -1,0 +1,134 @@
+"""Replay-ring kernel bench: blocked vs row-loop vs jnp, oracle-checked.
+
+Regresses the PR-3 blocked/double-buffered ring kernels against the PR-1
+row-at-a-time kernels and the jnp scatter/gather oracles at ring-scale
+shapes, and records the PER score-pass arms. Every arm is verified
+against its oracle first — any mismatch exits non-zero, which is the CI
+smoke contract (a kernel that got faster by reading the wrong rows is
+not a win). Writes ``BENCH_replay_kernels.json`` at the repo root.
+
+Wall time on CPU runs the kernels through the Pallas interpreter (the
+kernel body lowered op-by-op), so absolute numbers are NOT the TPU
+story — the entries exist to (1) exercise the blocked/windowed code
+paths at realistic shapes, (2) pin the jnp-oracle XLA-CPU numbers the
+throughput tables build on, and (3) let future PRs diff the arms.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_replay_kernels
+[--tiny]``; ``--tiny`` is the CI smoke preset.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import replay_ops as rops
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _check(name: str, got, want, atol=0.0) -> bool:
+    ok = np.allclose(np.asarray(got), np.asarray(want), atol=atol)
+    if not ok:
+        print(f"ORACLE MISMATCH in {name}", file=sys.stderr)
+    return ok
+
+
+def bench_ring_write(cap, n, feat, iters) -> dict:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    data = jax.random.normal(k1, (cap, feat))
+    batch = jax.random.normal(k2, (n, feat))
+    ptr = jnp.asarray(cap - n // 2, jnp.int32)      # wraps mid-write
+    want = rops.ring_write_ref(data, batch, ptr)
+    arms = {
+        "blocked": jax.jit(functools.partial(rops.ring_write)),
+        "rowloop": jax.jit(functools.partial(rops.ring_write_rowloop)),
+        "jnp": jax.jit(rops.ring_write_ref),
+    }
+    rec, ok = {}, True
+    for name, fn in arms.items():
+        ok &= _check(f"ring_write/{name}", fn(data, batch, ptr), want)
+        rec[f"{name}_ms"] = round(
+            time_call(lambda fn=fn: fn(data, batch, ptr), iters) * 1e3, 3)
+    return rec, ok
+
+
+def bench_ring_gather(cap, bsz, feat, iters) -> dict:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    data = jax.random.normal(k1, (cap, feat))
+    idx = jax.random.randint(k2, (bsz,), 0, cap)
+    want = jnp.take(data, idx, axis=0)
+    arms = {
+        "blocked": jax.jit(functools.partial(rops.ring_gather)),
+        "rowloop": jax.jit(functools.partial(rops.ring_gather_rowloop)),
+        "jnp": jax.jit(lambda d, i: jnp.take(d, i, axis=0)),
+    }
+    rec, ok = {}, True
+    for name, fn in arms.items():
+        ok &= _check(f"ring_gather/{name}", fn(data, idx), want)
+        rec[f"{name}_ms"] = round(
+            time_call(lambda fn=fn: fn(data, idx), iters) * 1e3, 3)
+    return rec, ok
+
+
+def bench_per_scores(cap, iters) -> dict:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    # half-empty pool: the masked (-inf) path is exercised, not skipped
+    pri = jnp.where(jax.random.uniform(k1, (cap,)) > 0.5,
+                    jax.random.uniform(k1, (cap,)) + 0.1, 0.0)
+    g = jax.random.gumbel(k2, (cap,))
+    want = rops.per_scores_ref(pri, g, 0.6)
+    arms = {
+        "pallas": jax.jit(lambda p, n: rops.per_scores(p, n, 0.6)),
+        "jnp": jax.jit(lambda p, n: rops.per_scores_ref(p, n, 0.6)),
+    }
+    rec, ok = {}, True
+    for name, fn in arms.items():
+        ok &= _check(f"per_scores/{name}", fn(pri, g), want)
+        rec[f"{name}_ms"] = round(
+            time_call(lambda fn=fn: fn(pri, g), iters) * 1e3, 3)
+    return rec, ok
+
+
+def main(tiny: bool = False,
+         out: str = os.path.join(ROOT, "BENCH_replay_kernels.json")) -> bool:
+    if tiny:
+        cap, n, bsz, feat, iters = 2048, 256, 256, 8, 2
+    else:
+        cap, n, bsz, feat, iters = 16384, 1024, 1024, 16, 3
+    cfg = {"capacity": cap, "write_rows": n, "gather_rows": bsz,
+           "features": feat, "tiny": tiny,
+           "backend": jax.default_backend(),
+           "interpret": jax.default_backend() != "tpu"}
+    write_rec, ok_w = bench_ring_write(cap, n, feat, iters)
+    gather_rec, ok_g = bench_ring_gather(cap, bsz, feat, iters)
+    per_rec, ok_p = bench_per_scores(cap, iters)
+    oracle_ok = bool(ok_w and ok_g and ok_p)
+    emit("replay_kernels", "ring_write", **write_rec)
+    emit("replay_kernels", "ring_gather", **gather_rec)
+    emit("replay_kernels", "per_scores", **per_rec)
+    emit("replay_kernels", "oracle", ok=oracle_ok)
+    report = {"config": cfg, "ring_write": write_rec,
+              "ring_gather": gather_rec, "per_scores": per_rec,
+              "oracle_ok": oracle_ok}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return oracle_ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke preset (small shapes, fewer iters)")
+    ap.add_argument("--out", default=os.path.join(
+        ROOT, "BENCH_replay_kernels.json"))
+    args = ap.parse_args()
+    sys.exit(0 if main(tiny=args.tiny, out=args.out) else 1)

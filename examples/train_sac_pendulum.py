@@ -33,6 +33,11 @@ def main():
         "--overlap-eval", action="store_true",
         help="megastep emits a donated actor snapshot that eval/viz "
              "consume without blocking the next dispatch")
+    ap.add_argument(
+        "--pallas", action="store_true",
+        help="run the replay ring through the blocked Pallas kernels "
+             "(Mosaic on TPU, interpreter elsewhere); with --mesh they "
+             "run shard_map-native on each group's ring shard")
     args = ap.parse_args()
 
     mesh = None
@@ -70,6 +75,7 @@ def main():
         rounds_per_dispatch=rpd,
         mesh=mesh, placement=args.placement,
         overlap_eval=args.overlap_eval,
+        use_pallas=args.pallas,
         weight_sync="ssd",          # eval reads .npz snapshots (paper §3.3.1)
         eval_every_rounds=25)
     trainer = SpreezeTrainer(cfg)

@@ -1,0 +1,18 @@
+"""Spreeze reproduction package.
+
+One global knob lives here: ``jax_threefry_partitionable`` is switched
+on at import. The framework's whole design moves tensors between
+layouts (replicated eager warmup, sharded megastep, shard_map replay
+kernels), and with the legacy non-partitionable threefry the VALUES of
+``jax.random`` draws depend on how GSPMD partitions the generating
+computation — e.g. constraining the training batch to ``P("batch")``
+silently changes the SAC action noise, so a kernel that merely pins a
+sharding would "diverge" from its oracle by design. Partitionable
+threefry makes every draw layout-invariant (it is also the modern jax
+default), at the cost of a one-time change of the raw streams relative
+to the legacy impl — all in-repo comparisons are path-vs-path within
+one process, so nothing observable depends on the legacy bits.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

@@ -61,6 +61,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import model_parallel as mp
 from repro.core.transfer import make_transfer
 from repro.distributed.sharding import trainer_rules, use_rules
+from repro.kernels import ops as kops
 from repro.envs import base as env_base
 from repro.replay import buffer as rb
 from repro.rl.base import AlgoHP, get_algo
@@ -95,6 +96,13 @@ class SpreezeConfig:
     # actor replicates. None = the single-device megastep.
     mesh: Optional[Any] = None
     placement: str = "ac"         # ac (Fig. 2b) | dp (Fig. 2a baseline)
+    # Pallas replay-ring kernels: None = inherit the ambient
+    # ``kernels.ops.use_pallas`` switch at trainer construction. The
+    # resolved value is pinned into every trace this trainer compiles
+    # (megastep, warmup pushes, eager rounds), so the kernel choice
+    # can't drift with the caller's context. With a mesh the kernels
+    # run shard_map-native on each group's ring shard.
+    use_pallas: Optional[bool] = None
     # megastep emits a donated actor snapshot each dispatch so eval/viz
     # consume weights without pinning the donated training state
     overlap_eval: bool = False
@@ -174,6 +182,8 @@ class SpreezeTrainer:
             self.replay = rb.init_replay(cfg.replay_capacity, specs)
         self.env_states = self.env.reset_batch(k_env, cfg.num_envs)
 
+        self.use_pallas = (kops.pallas_enabled() if cfg.use_pallas is None
+                           else bool(cfg.use_pallas))
         fusable = cfg.transfer == "shared" and not cfg.sync_mode
         self.use_fused = fusable if cfg.fused is None else cfg.fused
         if self.use_fused and not fusable:
@@ -214,10 +224,19 @@ class SpreezeTrainer:
             raise ValueError(f"ac axis size {cfg.mesh.shape['ac']} must "
                              f"divide the Q ensemble size {n_q} "
                              f"(algo {cfg.algo!r})")
-        rows = self._rules().axis_size(self._rules().batch)
+        from repro.launch.mesh import ring_shard_groups
+        rows = ring_shard_groups(cfg.mesh, cfg.placement)
         if cfg.replay_capacity % rows:
             raise ValueError(f"replay_capacity {cfg.replay_capacity} must "
                              f"be divisible by the batch-axis size {rows}")
+        if self.use_pallas and cfg.batch_size % max(rows, 1):
+            # the shard_map gather hands each group batch_size/groups
+            # output rows via psum_scatter; an uneven split would
+            # silently fall back to the jnp gather, which the Pallas
+            # opt-in explicitly forbids
+            raise ValueError(f"batch_size {cfg.batch_size} must be "
+                             f"divisible by the {rows} ring shards for "
+                             f"the mesh-native Pallas ring kernels")
 
     def _rules(self):
         return trainer_rules(self.cfg.mesh, self.cfg.placement)
@@ -333,6 +352,18 @@ class SpreezeTrainer:
             push = rb.add_batch
 
         rules = self._rules() if cfg.mesh is not None else None
+        pallas_on = self.use_pallas
+
+        def pinned(fn):
+            """Pin the trainer's resolved Pallas switch into the trace:
+            contexts are read at trace time, and the kernels a trainer
+            compiles must not drift with the caller's ambient
+            ``use_pallas`` state at whichever call happens to trace."""
+            @functools.wraps(fn)
+            def wrapped(*a, **kw):
+                with kops.use_pallas(pallas_on):
+                    return fn(*a, **kw)
+            return wrapped
 
         def make_megastep(rounds: int):
             """One XLA program for ``rounds`` iterations of
@@ -366,10 +397,13 @@ class SpreezeTrainer:
                 return state, replay, env_states, key, metrics
 
             if rules is None:
-                return jax.jit(megastep, donate_argnums=(0, 1, 2))
+                return jax.jit(pinned(megastep), donate_argnums=(0, 1, 2))
 
             def sharded_megastep(state, replay, env_states, key):
-                with use_rules(rules):      # active while jit traces
+                # rules + pallas switch active while jit traces: the
+                # ring ops dispatch to the shard_map Pallas kernels
+                # (each batch group on its local ring shard)
+                with use_rules(rules), kops.use_pallas(pallas_on):
                     return megastep(state, replay, env_states, key)
 
             rep = NamedSharding(cfg.mesh, P())
@@ -389,8 +423,9 @@ class SpreezeTrainer:
             self._env_sharding = mp.replicated_sharding(self.env_states,
                                                         rules)
         self._viz = jax.jit(viz_episode)
-        self._sampler = jax.jit(sampler_chunk, donate_argnums=(1,))
-        self._update_round = jax.jit(update_round, donate_argnums=(0, 1))
+        self._sampler = jax.jit(pinned(sampler_chunk), donate_argnums=(1,))
+        self._update_round = jax.jit(pinned(update_round),
+                                     donate_argnums=(0, 1))
         self._eval = jax.jit(eval_batch)
         self._make_megastep = make_megastep
         self._megastep = make_megastep(cfg.rounds_per_dispatch)
@@ -424,12 +459,13 @@ class SpreezeTrainer:
         import contextlib
         cfg = self.cfg
         frames_per_chunk = cfg.num_envs * cfg.chunk_len
-        # trace the eager ring writes under the trainer rules too, so the
-        # Pallas fallback sees the mesh (the sharded pool must not go
-        # through the single-device ring kernel)
+        # trace the eager ring writes under the trainer rules AND the
+        # trainer's pinned Pallas switch, so the warmup pushes dispatch
+        # to the same (shard_map-native on a mesh) kernels the megastep
+        # compiles — never the single-device kernel on a sharded pool
         rules_ctx = (use_rules(self._rules()) if cfg.mesh is not None
                      else contextlib.nullcontext())
-        with rules_ctx:
+        with rules_ctx, kops.use_pallas(self.use_pallas):
             while self.total_frames < cfg.warmup_frames:
                 self.env_states, exp, self.key, _ = self._sampler(
                     self.state.actor, self.env_states, self.key)

@@ -25,6 +25,7 @@ from dataclasses import dataclass, replace
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Logical = Union[str, None, Tuple[str, ...]]
@@ -142,6 +143,32 @@ def trainer_rules(mesh: Mesh, placement: str = "ac") -> MeshRules:
     return MeshRules(mesh=mesh,
                      batch=("batch",) if "batch" in names else None,
                      ac="ac" if "ac" in names else None)
+
+
+# ---------------------------------------------------------------------------
+# shard_map plumbing for the mesh-native replay kernels
+# ---------------------------------------------------------------------------
+
+def batch_axes(rules: MeshRules) -> Tuple[str, ...]:
+    """The physical mesh axes the ``batch`` logical dim maps to, as a
+    tuple (empty when unmapped) — the axis set the shard_map replay
+    kernels shard rows over and psum_scatter across."""
+    b = rules.batch
+    if b is None:
+        return ()
+    return (b,) if isinstance(b, str) else tuple(b)
+
+
+def batch_group_index(rules: MeshRules) -> jax.Array:
+    """Flat index of the calling device's batch group, valid only inside
+    ``shard_map`` over ``rules.mesh``. Row-major over the batch axis
+    tuple, matching how ``P(batch_axes)`` lays contiguous row chunks
+    over a multi-axis sharding — so ``group_index * (rows // groups)``
+    is the first global ring slot of the local shard."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in batch_axes(rules):
+        idx = idx * rules.mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -62,7 +62,7 @@ def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 def decode_attention(q, k_cache, v_cache, valid_len, *,
                      scale: Optional[float] = None, block_k: int = 256,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, H, d); caches: (B, S, KV, d); valid_len: scalar int32 —
     cache slots [0, valid_len) attend. Returns (B, H, d)."""
     B, H, d = q.shape
@@ -103,6 +103,6 @@ def decode_attention(q, k_cache, v_cache, valid_len, *,
         out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(vl, q, k_cache, v_cache)
     return out

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -78,7 +78,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Sq, H, d); k/v: (B, Sk, KV, d); H % KV == 0.
     q positions are aligned to the end of k (prefill/train: Sq == Sk)."""
     B, Sq, H, d = q.shape
@@ -125,7 +125,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     if pq:
         out = out[:, :Sq]

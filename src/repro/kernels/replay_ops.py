@@ -1,27 +1,72 @@
-"""Pallas replay-ring kernels: in-place scatter + batched gather (§3.3.2).
+"""Pallas replay-ring kernels: blocked, double-buffered, window-aware (§3.3.2).
 
-The replay pool is Spreeze's shared memory; its two hot operations are
-the sampler-side ring write (rows land at ``(ptr + i) % capacity``) and
-the updater-side batched random gather. On the jnp path XLA lowers these
-to scatter/gather HLOs against the whole ``(capacity, ...)`` operand;
-these kernels instead walk the rows with dynamic-slice stores, and
-``ring_write`` pins the pool buffer with ``input_output_aliases`` so the
-scatter is genuinely in place — the paper's "no dump" shared-memory
-semantics — when the caller donates the pool (``add_batch_jit`` /
-the fused megastep do).
+The replay pool is Spreeze's shared memory; its hot operations are the
+sampler-side ring write (rows land at ``(ptr + i) % capacity``), the
+updater-side batched random gather, and — for the APE-X-style PER
+comparison — the priority-score pass and the post-update priority
+scatter. The first generation of these kernels walked the pool one row
+at a time with ``dynamic_slice`` stores; these kernels instead tile the
+rows into blocks and pipeline the HBM<->VMEM traffic with
+``pltpu.make_async_copy`` double buffering:
 
-Both kernels run in interpret mode on this CPU container and compile to
-Mosaic on TPU. ``ring_write_ref`` / ``ring_gather_ref`` are the jnp
-oracles the tests compare against, including the wraparound case.
+* ``ring_write``  — the pool stays in HBM (``pl.ANY``); batch blocks are
+  DMA'd into a 2-slot VMEM scratch (block ``b+1`` fetches while block
+  ``b`` writes out) and leave as one contiguous VMEM->HBM DMA per block.
+  ``input_output_aliases`` pins the pool buffer so the scatter is
+  genuinely in place when the caller donates it (``add_batch_jit`` / the
+  fused megastep do).
+* ``ring_gather`` — a grid over output blocks (the Pallas pipeline
+  double-buffers the VMEM out tiles); within a block the random row
+  fetches run as a depth-``GATHER_DEPTH`` window of in-flight HBM->VMEM
+  DMAs instead of issue-wait-issue-wait.
+* ``per_scores`` — blocked elementwise pass producing the Gumbel-top-k
+  sampling scores for the PER pool (empty slots masked to a true -inf).
+* ``priority_scatter`` — scatter of new |TD|+eps priorities at the
+  sampled (arbitrary) indices.
+
+Every kernel takes a **window**: the operand may be a shard covering
+global ring slots ``[window_start, window_start + local_rows)`` of a
+``capacity``-row pool. Rows that fall outside the window are skipped
+(write/scatter) or zero-filled (gather — the shard_map wrapper in
+``kernels.ops`` combines the partial gathers with a ``psum_scatter``).
+With the default window (the whole pool) the kernels are the
+single-device fast path; under an active ``("ac","batch")`` mesh
+``kernels.ops`` wraps them in ``shard_map`` so each batch group runs the
+kernel on its local ring shard — no more jnp fallback under active mesh
+rules.
+
+``interpret`` resolves from the backend at trace time (``None`` ->
+interpreter off on TPU, on elsewhere); the ``*_ref`` functions are the
+jnp oracles the tests compare against, including wraparound and window
+cases. ``ring_write_rowloop`` / ``ring_gather_rowloop`` keep the PR-1
+row-at-a-time kernels alive as the bench baseline
+(``benchmarks/bench_replay_kernels.py``).
+
+``TRACE_COUNTS`` counts kernel *traces* (bumped at trace time, python
+side) so tests can prove a compiled program really contains the Pallas
+path instead of a silent jnp fallback.
 """
 from __future__ import annotations
 
+import collections
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import resolve_interpret
+
+BLOCK_ROWS = 128      # default rows per DMA block (f32 sublane-friendly)
+GATHER_DEPTH = 8      # in-flight row DMAs per gather block
+
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
 
 
 def _as2d(x: jax.Array) -> jax.Array:
@@ -30,12 +75,371 @@ def _as2d(x: jax.Array) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
-# ring write: scatter n rows at (ptr + i) % capacity
+# ring write: blocked scatter of n rows at (ptr + i) % capacity
 # --------------------------------------------------------------------------- #
 
-def _ring_write_kernel(ptr_ref, batch_ref, data_ref, out_ref,
-                       *, cap: int, n: int):
-    del data_ref     # aliased with out_ref: rows not written keep values
+def _ring_write_kernel(scal_ref, batch_ref, data_ref, out_ref, *,
+                       cap: int, n: int, rows_local: int, blk: int):
+    """Double-buffered blocked ring write into the window
+    [lo, lo + rows_local) of a ``cap``-slot ring.
+
+    Fast path: a full block whose destination run is contiguous (no ring
+    wrap) and fully inside the window leaves as ONE VMEM->HBM DMA. The
+    (at most one) block that wraps the ring, the (at most two) blocks
+    straddling the window edge, and the partial tail block fall back to
+    per-row DMAs. Blocks entirely outside the window are neither fetched
+    nor written.
+    """
+    del data_ref                    # aliased with out_ref
+    ptr, lo = scal_ref[0], scal_ref[1]
+    hi = lo + rows_local
+    nb = pl.cdiv(n, blk)
+
+    def rows_in(b):                 # rows this block actually carries
+        return jnp.minimum(n - b * blk, blk)
+
+    def start_slot(b):              # global slot of the block's first row
+        return jax.lax.rem(ptr + b * blk, cap)
+
+    def need(b):
+        """Does block ``b`` touch the window at all? (conservative for
+        the wrap block)"""
+        s, m = start_slot(b), rows_in(b)
+        wrapped = s + m > cap
+        disjoint = (s + m <= lo) | (s >= hi)
+        return wrapped | ~disjoint
+
+    def body(scratch, fsems, wsems):
+        def fetch(slot, b):
+            return pltpu.make_async_copy(
+                batch_ref.at[pl.ds(b * blk, blk), :],
+                scratch.at[slot], fsems.at[slot])
+
+        @pl.when(need(0))
+        def _warmup():
+            fetch(0, 0).start()
+
+        def loop(b, carry):
+            slot = jax.lax.rem(b, 2)
+
+            @pl.when((b + 1 < nb) & need(b + 1))
+            def _prefetch():        # overlap next fetch with this write
+                fetch(jax.lax.rem(b + 1, 2), b + 1).start()
+
+            @pl.when(need(b))
+            def _process():
+                fetch(slot, b).wait()
+                s, m = start_slot(b), rows_in(b)
+                fast = ((m == blk) & (s + blk <= cap)
+                        & (s >= lo) & (s + blk <= hi))
+
+                @pl.when(fast)
+                def _blocked():
+                    w = pltpu.make_async_copy(
+                        scratch.at[slot],
+                        out_ref.at[pl.ds(s - lo, blk), :],
+                        wsems.at[slot])
+                    w.start()
+                    w.wait()
+
+                @pl.when(~fast)
+                def _edges():       # ring wrap / window edge / tail
+                    def row(i, c):
+                        dest = jax.lax.rem(ptr + b * blk + i, cap) - lo
+
+                        @pl.when((i < m) & (dest >= 0)
+                                 & (dest < rows_local))
+                        def _row():
+                            w = pltpu.make_async_copy(
+                                scratch.at[slot, pl.ds(i, 1), :],
+                                out_ref.at[pl.ds(dest, 1), :],
+                                wsems.at[slot])
+                            w.start()
+                            w.wait()
+                        return c
+                    jax.lax.fori_loop(0, blk, row, 0)
+            return carry
+
+        jax.lax.fori_loop(0, nb, loop, 0)
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((2, blk, batch_ref.shape[1]), batch_ref.dtype),
+        fsems=pltpu.SemaphoreType.DMA((2,)),
+        wsems=pltpu.SemaphoreType.DMA((2,)))
+
+
+def ring_write(data: jax.Array, batch: jax.Array, ptr, *,
+               capacity: Optional[int] = None, window_start=0,
+               block_rows: int = BLOCK_ROWS,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Write ``batch`` (n, ...) into ``data`` at ring slots
+    ``(ptr + i) % capacity``.
+
+    ``data`` holds global slots ``[window_start, window_start +
+    data.shape[0])`` of a ``capacity``-slot pool (defaults: the whole
+    pool). Rows landing outside the window are skipped — the shard_map
+    path gives every batch group the full batch and lets each keep its
+    own rows. Requires n <= capacity (``replay.buffer.write_plan`` drops
+    the over-capacity duplicates); rows not written keep their values
+    (the output aliases the input buffer)."""
+    rows_local, n = data.shape[0], batch.shape[0]
+    cap = rows_local if capacity is None else capacity
+    if n > cap:
+        raise ValueError(f"ring_write of {n} rows into capacity {cap}")
+    if n == 0:
+        return data
+    TRACE_COUNTS["ring_write"] += 1
+    orig = data.shape
+    d2 = _as2d(data)
+    b2 = _as2d(batch.astype(data.dtype))
+    # a block must fit the (possibly sharded) destination window: the
+    # fast-path DMA statically slices blk rows out of rows_local
+    blk = max(1, min(block_rows, n, rows_local))
+    pad = (-n) % blk
+    if pad:                         # fetches are whole blocks; the tail
+        b2 = jnp.pad(b2, ((0, pad), (0, 0)))     # rows are never written
+    scal = jnp.stack([jnp.asarray(ptr, jnp.int32),
+                      jnp.asarray(window_start, jnp.int32)])
+    out = pl.pallas_call(
+        functools.partial(_ring_write_kernel, cap=cap, n=n,
+                          rows_local=rows_local, blk=blk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(d2.shape, d2.dtype),
+        input_output_aliases={2: 0},
+        interpret=resolve_interpret(interpret),
+    )(scal, b2, d2)
+    return out.reshape(orig)
+
+
+def ring_write_ref(data: jax.Array, batch: jax.Array, ptr, *,
+                   capacity: Optional[int] = None,
+                   window_start=0) -> jax.Array:
+    """jnp oracle for ``ring_write`` (window rows written, rest dropped)."""
+    rows_local, n = data.shape[0], batch.shape[0]
+    cap = rows_local if capacity is None else capacity
+    dest = (jnp.asarray(ptr, jnp.int32) + jnp.arange(n)) % cap
+    local = dest - jnp.asarray(window_start, jnp.int32)
+    oob = (local < 0) | (local >= rows_local)
+    # out-of-window rows redirect to index rows_local -> dropped
+    return data.at[jnp.where(oob, rows_local, local)].set(
+        batch.astype(data.dtype), mode="drop")
+
+
+# --------------------------------------------------------------------------- #
+# ring gather: blocked batched random row gather
+# --------------------------------------------------------------------------- #
+
+def _ring_gather_kernel(info_ref, idx_ref, data_ref, out_ref, sems, *,
+                        rows_local: int, blk: int, depth: int):
+    """One (blk, F) VMEM out tile per grid step; within the tile the row
+    DMAs run ``depth`` deep. Out-of-window rows are zero-filled so the
+    shard_map wrapper can sum the partial gathers."""
+    b = pl.program_id(0)
+    lo = info_ref[0]
+    base = b * blk
+
+    def row_copy(i):
+        j = idx_ref[base + i] - lo
+        inside = (j >= 0) & (j < rows_local)
+        jc = jnp.clip(j, 0, rows_local - 1)
+        return inside, pltpu.make_async_copy(
+            data_ref.at[pl.ds(jc, 1), :],
+            out_ref.at[pl.ds(i, 1), :],
+            sems.at[jax.lax.rem(i, depth)])
+
+    def start(i):
+        inside, cp = row_copy(i)
+
+        @pl.when(inside)
+        def _go():
+            cp.start()
+
+        @pl.when(~inside)
+        def _zero():
+            out_ref[pl.ds(i, 1), :] = jnp.zeros(
+                (1, out_ref.shape[1]), out_ref.dtype)
+
+    for i in range(min(depth, blk)):    # static warm-up window
+        start(i)
+
+    def loop(i, carry):
+        inside, cp = row_copy(i)
+
+        @pl.when(inside)
+        def _wait():
+            cp.wait()
+
+        @pl.when(i + depth < blk)
+        def _refill():
+            start(i + depth)
+        return carry
+
+    jax.lax.fori_loop(0, blk, loop, 0)
+
+
+def ring_gather(data: jax.Array, idx: jax.Array, *, window_start=0,
+                block_rows: int = BLOCK_ROWS,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Gather ``pool[idx]`` for a (batch,) int vector of *global* ring
+    slots, where ``data`` holds the window ``[window_start, window_start
+    + data.shape[0])`` of the pool. Out-of-window rows come back zeroed
+    (summed away by the shard_map combiner); with the default window
+    every valid slot is inside."""
+    TRACE_COUNTS["ring_gather"] += 1
+    orig_row = data.shape[1:]
+    d2 = _as2d(data)
+    rows_local, nfeat = d2.shape
+    bsz = idx.shape[0]
+    blk = max(1, min(block_rows, bsz))
+    pad = (-bsz) % blk
+    idx2 = idx.astype(jnp.int32)
+    if pad:                          # padded rows index -1 -> zero-filled
+        idx2 = jnp.pad(idx2, (0, pad), constant_values=-1)
+    nb = idx2.shape[0] // blk
+    depth = min(GATHER_DEPTH, blk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((blk, nfeat), lambda b, info, idx: (b, 0)),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((depth,))])
+    out = pl.pallas_call(
+        functools.partial(_ring_gather_kernel, rows_local=rows_local,
+                          blk=blk, depth=depth),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb * blk, nfeat), data.dtype),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(window_start, jnp.int32).reshape(1), idx2, d2)
+    return out[:bsz].reshape((bsz,) + orig_row)
+
+
+def ring_gather_ref(data: jax.Array, idx: jax.Array, *,
+                    window_start=0) -> jax.Array:
+    """jnp oracle for ``ring_gather`` (zeros for out-of-window rows)."""
+    local = idx - jnp.asarray(window_start, jnp.int32)
+    inside = (local >= 0) & (local < data.shape[0])
+    rows = jnp.take(data, jnp.clip(local, 0, data.shape[0] - 1), axis=0)
+    mask = inside.reshape((-1,) + (1,) * (data.ndim - 1))
+    return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+
+# --------------------------------------------------------------------------- #
+# PER: Gumbel-top-k sampling scores + priority scatter
+# --------------------------------------------------------------------------- #
+
+def per_scores_ref(priorities: jax.Array, gumbel: jax.Array,
+                   alpha: float) -> jax.Array:
+    """Gumbel-top-k scores over alpha-annealed log-priorities; this is
+    BOTH the jnp oracle and the kernel's in-block math, so the two paths
+    pick bit-identical samples. Unwritten slots (p == 0) get a true
+    ``-inf`` — finite Gumbel noise can never resurrect them (the old
+    ``log(max(p, 1e-12)) ~ -16.6`` floor could be out-drawn)."""
+    logp = jnp.where(priorities > 0.0,
+                     alpha * jnp.log(jnp.maximum(priorities, 1e-12)),
+                     -jnp.inf)
+    return logp + gumbel
+
+
+def _per_scores_kernel(pri_ref, g_ref, out_ref, *, alpha: float):
+    out_ref[...] = per_scores_ref(pri_ref[...], g_ref[...], alpha)
+
+
+def per_scores(priorities: jax.Array, gumbel: jax.Array, alpha: float, *,
+               block: int = 1024,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Blocked elementwise pass over the (rows,) priority vector -> the
+    Gumbel-top-k sampling scores (see ``per_scores_ref``). The caller
+    runs ``top_k`` on the result; under shard_map each group scores its
+    local priority shard."""
+    TRACE_COUNTS["per_scores"] += 1
+    (rows,) = priorities.shape
+    blk = max(128, min(block, rows))
+    pad = (-rows) % blk
+    p2 = jnp.pad(priorities, (0, pad)) if pad else priorities
+    g2 = jnp.pad(gumbel, (0, pad)) if pad else gumbel
+    nb = p2.shape[0] // blk
+    p2, g2 = p2.reshape(nb, blk), g2.reshape(nb, blk)
+    out = pl.pallas_call(
+        functools.partial(_per_scores_kernel, alpha=alpha),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda b: (b, 0)),
+                  pl.BlockSpec((1, blk), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((1, blk), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(p2, g2)
+    return out.reshape(nb * blk)[:rows]
+
+
+def _priority_scatter_kernel(lo_ref, idx_ref, val_ref, pri_ref, out_ref, *,
+                             k: int, rows_local: int):
+    del pri_ref                     # aliased with out_ref
+    lo = lo_ref[0]
+
+    def row(i, carry):
+        dest = idx_ref[i] - lo
+
+        @pl.when((dest >= 0) & (dest < rows_local))
+        def _write():
+            out_ref[pl.ds(jnp.clip(dest, 0, rows_local - 1), 1), :] = (
+                jnp.full((1, 1), val_ref[i], out_ref.dtype))
+        return carry
+
+    jax.lax.fori_loop(0, k, row, 0)
+
+
+def priority_scatter(priorities: jax.Array, idx: jax.Array,
+                     values: jax.Array, *, window_start=0,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """``priorities[idx - window_start] = values`` for the in-window
+    subset of the (arbitrary, PER-sampled) indices; out-of-window
+    updates are dropped (they belong to another group's shard). In place
+    via aliasing when the caller donates the priority vector."""
+    TRACE_COUNTS["priority_scatter"] += 1
+    (rows_local,) = priorities.shape
+    k = idx.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_priority_scatter_kernel, k=k,
+                          rows_local=rows_local),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((rows_local, 1), jnp.float32),
+        input_output_aliases={3: 0},
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(window_start, jnp.int32).reshape(1),
+      idx.astype(jnp.int32), values.astype(jnp.float32),
+      priorities.reshape(rows_local, 1))
+    return out.reshape(rows_local)
+
+
+def priority_scatter_ref(priorities: jax.Array, idx: jax.Array,
+                         values: jax.Array, *, window_start=0) -> jax.Array:
+    """jnp oracle for ``priority_scatter``."""
+    rows_local = priorities.shape[0]
+    local = idx - jnp.asarray(window_start, jnp.int32)
+    oob = (local < 0) | (local >= rows_local)
+    return priorities.at[jnp.where(oob, rows_local, local)].set(
+        values.astype(priorities.dtype), mode="drop")
+
+
+# --------------------------------------------------------------------------- #
+# PR-1 row-at-a-time kernels: kept as the bench baseline
+# --------------------------------------------------------------------------- #
+
+def _ring_write_rowloop_kernel(ptr_ref, batch_ref, data_ref, out_ref,
+                               *, cap: int, n: int):
+    del data_ref                    # aliased with out_ref
     ptr = ptr_ref[0]
 
     def body(i, carry):
@@ -46,12 +450,11 @@ def _ring_write_kernel(ptr_ref, batch_ref, data_ref, out_ref,
     jax.lax.fori_loop(0, n, body, 0)
 
 
-def ring_write(data: jax.Array, batch: jax.Array, ptr,
-               *, interpret: bool = True) -> jax.Array:
-    """Write ``batch`` (n, ...) into ``data`` (capacity, ...) at the ring
-    positions ``(ptr + i) % capacity``; rows beyond the write stay put
-    (the output aliases the input buffer). Requires n <= capacity — the
-    caller (``replay.buffer.add_batch``) drops older duplicate rows."""
+def ring_write_rowloop(data: jax.Array, batch: jax.Array, ptr, *,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """The PR-1 per-row dynamic-slice ring write (whole pool in VMEM) —
+    the baseline ``benchmarks/bench_replay_kernels.py`` regresses the
+    blocked kernel against."""
     cap, n = data.shape[0], batch.shape[0]
     if n > cap:
         raise ValueError(f"ring_write of {n} rows into capacity {cap}")
@@ -59,7 +462,7 @@ def ring_write(data: jax.Array, batch: jax.Array, ptr,
     d2 = _as2d(data)
     b2 = _as2d(batch.astype(data.dtype))
     out = pl.pallas_call(
-        functools.partial(_ring_write_kernel, cap=cap, n=n),
+        functools.partial(_ring_write_rowloop_kernel, cap=cap, n=n),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.VMEM),
@@ -68,23 +471,12 @@ def ring_write(data: jax.Array, batch: jax.Array, ptr,
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct(d2.shape, d2.dtype),
         input_output_aliases={2: 0},
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(ptr, jnp.int32).reshape((1,)), b2, d2)
     return out.reshape(orig)
 
 
-def ring_write_ref(data: jax.Array, batch: jax.Array, ptr) -> jax.Array:
-    """jnp oracle for ``ring_write``."""
-    cap, n = data.shape[0], batch.shape[0]
-    idx = (jnp.asarray(ptr, jnp.int32) + jnp.arange(n)) % cap
-    return data.at[idx].set(batch.astype(data.dtype))
-
-
-# --------------------------------------------------------------------------- #
-# ring gather: batched random row gather
-# --------------------------------------------------------------------------- #
-
-def _ring_gather_kernel(idx_ref, data_ref, out_ref, *, bsz: int):
+def _ring_gather_rowloop_kernel(idx_ref, data_ref, out_ref, *, bsz: int):
     def body(i, carry):
         j = idx_ref[i]
         out_ref[pl.ds(i, 1), :] = data_ref[pl.ds(j, 1), :]
@@ -93,25 +485,20 @@ def _ring_gather_kernel(idx_ref, data_ref, out_ref, *, bsz: int):
     jax.lax.fori_loop(0, bsz, body, 0)
 
 
-def ring_gather(data: jax.Array, idx: jax.Array,
-                *, interpret: bool = True) -> jax.Array:
-    """Gather ``data[idx]`` for an (batch,) int vector of ring slots."""
+def ring_gather_rowloop(data: jax.Array, idx: jax.Array, *,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """The PR-1 per-row gather (whole pool in VMEM) — bench baseline."""
     orig_row = data.shape[1:]
     d2 = _as2d(data)
     bsz = idx.shape[0]
     out = pl.pallas_call(
-        functools.partial(_ring_gather_kernel, bsz=bsz),
+        functools.partial(_ring_gather_rowloop_kernel, bsz=bsz),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.VMEM),
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((bsz, d2.shape[1]), data.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx.astype(jnp.int32), d2)
     return out.reshape((bsz,) + orig_row)
-
-
-def ring_gather_ref(data: jax.Array, idx: jax.Array) -> jax.Array:
-    """jnp oracle for ``ring_gather``."""
-    return jnp.take(data, idx, axis=0)

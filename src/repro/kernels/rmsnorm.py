@@ -9,12 +9,14 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -25,7 +27,7 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 
 def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
-            interpret: bool = True) -> jax.Array:
+            interpret: Optional[bool] = None) -> jax.Array:
     """x: (..., D); weight: (D,)."""
     orig_shape = x.shape
     D = x.shape[-1]
@@ -50,7 +52,7 @@ def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
         out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x2, weight)
     if pr:
         out = out[:rows]

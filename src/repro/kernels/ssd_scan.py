@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._compat import CompilerParams
+from repro.kernels._compat import CompilerParams, resolve_interpret
 
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_scr, *,
@@ -74,7 +74,7 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_scr, *,
 
 
 def ssd_scan(x, dtA, B_, C_, *, chunk: int = 64,
-             interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+             interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
     """SSD forward. x: (B, S, H, P) pre-scaled by dt; dtA: (B, S, H);
     B_/C_: (B, S, H, N) (groups pre-broadcast). S % chunk == 0.
     Returns (y (B, S, H, P), final_state (B, H, P, N))."""
@@ -105,6 +105,6 @@ def ssd_scan(x, dtA, B_, C_, *, chunk: int = 64,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dtA, B_, C_)
     return y, fin

@@ -65,6 +65,18 @@ def parse_ac_mesh(spec: str) -> Mesh:
     return make_ac_mesh(ac, batch)
 
 
+def ring_shard_groups(mesh: Mesh, placement: str = "ac") -> int:
+    """Number of replay-ring shards (batch groups) an ('ac','batch')
+    trainer mesh induces under the given placement — the divisor
+    ``replay_capacity`` and ``batch_size`` must both honor for the
+    shard_map ring kernels to run mesh-native instead of falling back
+    to the jnp scatter/gather (``SpreezeTrainer._check_mesh`` validates
+    both through here)."""
+    from repro.distributed.sharding import trainer_rules
+    rules = trainer_rules(mesh, placement)
+    return rules.axis_size(rules.batch)
+
+
 def make_debug_mesh(data: int = 1, model: int = 1) -> Optional[Mesh]:
     """Small mesh over however many devices exist (tests)."""
     n = data * model

@@ -22,11 +22,26 @@ from repro.distributed.sharding import current_rules, shard
 from repro.kernels import ops as kops
 
 
-def _use_pallas_ring() -> bool:
-    """The Pallas ring kernels are single-device programs; under active
-    mesh rules (the sharded megastep) the jnp scatter/gather forms let
-    GSPMD keep the ring ops group-local instead."""
-    return kops.pallas_enabled() and not current_rules().active
+def _ring_mode(cap_rows: int, sample_rows=None) -> str:
+    """Which form a ring op traces to: ``"pallas"`` (single-device
+    blocked kernel), ``"shard"`` (the kernel inside ``shard_map`` over
+    the active mesh's batch axes — each group operates on its local ring
+    shard), or ``"jnp"`` (kernels off, or the active rules can't tile
+    the op: no batch axis, or the row counts don't divide the group
+    count). ``sample_rows`` is the gather's output row count, which the
+    shard path's ``psum_scatter`` must also split evenly."""
+    if not kops.pallas_enabled():
+        return "jnp"
+    r = current_rules()
+    if not r.active:
+        return "pallas"
+    if not r.batch:
+        return "jnp"
+    groups = r.axis_size(r.batch)
+    if cap_rows % groups or (sample_rows is not None
+                             and sample_rows % groups):
+        return "jnp"
+    return "shard"
 
 
 class ReplayState(NamedTuple):
@@ -75,19 +90,27 @@ def write_plan(ptr, n: int, cap: int):
 
 
 def scatter_rows(dest: jax.Array, rows: jax.Array, ptr0) -> jax.Array:
-    """dest[(ptr0 + i) % cap] = rows via the Pallas ring kernel or the
-    jnp scatter, per the ``use_pallas`` switch (read at trace time)."""
-    if _use_pallas_ring():
+    """dest[(ptr0 + i) % cap] = rows via the blocked Pallas ring kernel
+    (shard_map'd onto the mesh under active rules) or the jnp scatter,
+    per ``_ring_mode`` (read at trace time)."""
+    mode = _ring_mode(dest.shape[0])
+    if mode == "pallas":
         return kops.ring_write(dest, rows, ptr0)
+    if mode == "shard":
+        return kops.ring_write_sharded(dest, rows, ptr0, current_rules())
     idx = (ptr0 + jnp.arange(rows.shape[0])) % dest.shape[0]
     return dest.at[idx].set(rows.astype(dest.dtype))
 
 
 def gather_rows(data: jax.Array, idx: jax.Array) -> jax.Array:
-    """data[idx] via the Pallas ring kernel or jnp.take, per the
-    ``use_pallas`` switch (read at trace time)."""
-    if _use_pallas_ring():
+    """data[idx] via the blocked Pallas ring kernel (shard_map'd onto
+    the mesh under active rules) or jnp.take, per ``_ring_mode`` (read
+    at trace time)."""
+    mode = _ring_mode(data.shape[0], idx.shape[0])
+    if mode == "pallas":
         return kops.ring_gather(data, idx)
+    if mode == "shard":
+        return kops.ring_gather_sharded(data, idx, current_rules())
     return jnp.take(data, idx, axis=0)
 
 
@@ -138,10 +161,11 @@ def _pallas_keyed_jit(fn):
 
 def _ring_trace_key():
     """Everything ``add_batch`` reads from context at trace time: the
-    Pallas switch and the mesh rules (whose ``shard`` constraints would
-    otherwise leak across trainers — e.g. commit a meshless trainer's
-    replay onto another trainer's mesh)."""
-    return (_use_pallas_ring(), current_rules())
+    Pallas switch (``_ring_mode`` derives from it + the rules + shapes,
+    and shapes already key the jit cache) and the mesh rules (whose
+    ``shard`` constraints would otherwise leak across trainers — e.g.
+    commit a meshless trainer's replay onto another trainer's mesh)."""
+    return (kops.pallas_enabled(), current_rules())
 
 
 _add_batch_jit = _pallas_keyed_jit(add_batch)

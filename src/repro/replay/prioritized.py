@@ -11,20 +11,33 @@ the Gumbel-top-k trick — ``argtop_k(log p_i + G_i)`` draws k indices
 WITHOUT replacement proportionally to p_i in one fused vectorized pass
 (O(N) work, no tree, no host round-trip), which is the bandwidth-friendly
 form for an accelerator.
+
+Empty-slot semantics: unwritten rows carry priority 0 and are masked to
+a TRUE ``-inf`` score (a finite floor like ``log(1e-12)`` loses to
+Gumbel noise and silently feeds all-zero rows into the update — the
+original bug). Draws beyond the live-row count cycle through the live
+draws (sampling with replacement once the pool is exhausted), and
+importance weights normalize over the written rows only, so a
+partially-filled pool doesn't deflate the live probabilities with the
+phantom mass of empty capacity slots.
+
+Under ``use_pallas`` the score pass and the re-prioritization scatter run
+as blocked Pallas kernels (``kernels.replay_ops``), shard_map'd over the
+mesh batch axes when rules are active — same dispatch as the ring
+scatter/gather (see ``buffer._ring_mode``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import current_rules, shard
 from repro.kernels import ops as kops
 from repro.replay.buffer import (ReplayState, _pallas_keyed_jit,
-                                 gather_rows, init_replay, scatter_rows,
-                                 write_plan)
+                                 _ring_mode, gather_rows, init_replay,
+                                 scatter_rows, write_plan)
 
 
 class PrioritizedState(NamedTuple):
@@ -57,35 +70,69 @@ def add_batch(state: PrioritizedState, batch: Dict[str, jax.Array]
                             max_priority=state.max_priority)
 
 
+def _scores(priorities: jax.Array, gumbel: jax.Array,
+            alpha: float) -> jax.Array:
+    """Sampling scores via the Pallas kernel or the jnp oracle (same
+    formula — ``per_scores_ref`` — so both paths draw identically)."""
+    mode = _ring_mode(priorities.shape[0])
+    if mode == "pallas":
+        return kops.per_scores(priorities, gumbel, alpha)
+    if mode == "shard":
+        return kops.per_scores_sharded(priorities, gumbel, alpha,
+                                       current_rules())
+    return kops.per_scores_ref(priorities, gumbel, alpha)
+
+
 def sample(state: PrioritizedState, key, batch_size: int, *,
            alpha: float = 0.6, beta: float = 0.4
            ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
     """-> (batch, indices, importance weights (normalized to max 1)).
 
     Gumbel-top-k over alpha-annealed log-priorities == sampling without
-    replacement proportional to p^alpha.
+    replacement proportional to p^alpha. Unwritten slots (p == 0) score
+    a true ``-inf`` and can never be drawn; if ``batch_size`` exceeds
+    the live-row count the surplus draws cycle through the live draws
+    (replacement kicks in only once the pool is exhausted). The pool
+    must hold at least one written row (warmup guarantees it).
     """
-    logp = alpha * jnp.log(jnp.maximum(state.priorities, 1e-12))
-    # unwritten rows have p=0 -> logp ~ -inf -> never drawn
     g = -jnp.log(-jnp.log(
-        jax.random.uniform(key, logp.shape, minval=1e-12, maxval=1.0)))
-    idx = jax.lax.top_k(logp + g, batch_size)[1]
+        jax.random.uniform(key, state.priorities.shape,
+                           minval=1e-12, maxval=1.0)))
+    idx = jax.lax.top_k(_scores(state.priorities, g, alpha),
+                        batch_size)[1]
+    # every live row outranks every -inf empty slot, so draws past the
+    # live count are garbage — wrap them onto the live draws
+    live = state.priorities > 0.0
+    n_live = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+    idx = jnp.take(idx, jnp.arange(batch_size) % n_live)
     batch = {k: gather_rows(v, idx) for k, v in state.base.data.items()}
 
-    # importance weights: w_i = (N * P(i))^-beta, normalized by max
-    p = jnp.maximum(state.priorities, 1e-12) ** alpha
-    probs = p / jnp.sum(p)
-    n_live = jnp.maximum(state.base.size, 1).astype(jnp.float32)
-    w = (n_live * jnp.take(probs, idx)) ** (-beta)
+    # importance weights: w_i = (N * P(i))^-beta, normalized by max.
+    # P(i) normalizes over the WRITTEN rows only — the 1e-12-floored
+    # mass of empty capacity slots used to bias live-row weights
+    # whenever the pool wasn't full.
+    p = jnp.where(live, jnp.maximum(state.priorities, 1e-12) ** alpha, 0.0)
+    probs = p / jnp.maximum(jnp.sum(p), 1e-12)
+    w = (n_live.astype(jnp.float32) * jnp.take(probs, idx)) ** (-beta)
     w = w / jnp.maximum(jnp.max(w), 1e-12)
     return batch, idx, w
 
 
 def update_priorities(state: PrioritizedState, idx, td_errors,
                       eps: float = 1e-3) -> PrioritizedState:
-    """Set sampled rows' priorities to |TD error| + eps (PER eq. 1)."""
+    """Set sampled rows' priorities to |TD error| + eps (PER eq. 1) via
+    the Pallas scatter kernel (group-local under shard_map) or the jnp
+    scatter, per the trace-time dispatch."""
     pri_new = jnp.abs(td_errors) + eps
-    pri = shard(state.priorities.at[idx].set(pri_new), "batch")
+    mode = _ring_mode(state.priorities.shape[0])
+    if mode == "pallas":
+        pri = kops.priority_scatter(state.priorities, idx, pri_new)
+    elif mode == "shard":
+        pri = kops.priority_scatter_sharded(state.priorities, idx,
+                                            pri_new, current_rules())
+    else:
+        pri = state.priorities.at[idx].set(pri_new)
+    pri = shard(pri, "batch")
     return PrioritizedState(
         base=state.base, priorities=pri,
         max_priority=jnp.maximum(state.max_priority, jnp.max(pri_new)))

@@ -82,15 +82,43 @@ def run_check():
                     jax.tree.leaves(tr_sh.state.actor)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
-    # prioritized + dp placements compile and produce finite losses
-    # (PER index selection is discontinuous in float noise, so no
-    # cross-layout equality claim — see tests/test_sharded_megastep.py)
-    for kw in ({"prioritized": True}, {"placement": "dp"}):
+    # mesh-native Pallas ring kernels: same mesh, use_pallas on — the
+    # megastep must trace the shard_map kernels (trace counters prove
+    # no silent jnp fallback) and match the jnp-path mesh trainer
+    from repro.kernels import replay_ops as rops
+    rops.reset_trace_counts()
+    tr_pal = SpreezeTrainer(_cfg(mesh=mesh, use_pallas=True))
+    tr_pal._warmup()
+    _drive(tr_pal, 2)
+    assert rops.TRACE_COUNTS["shard:ring_write"] > 0, rops.TRACE_COUNTS
+    assert rops.TRACE_COUNTS["shard:ring_gather"] > 0, rops.TRACE_COUNTS
+    assert int(tr_pal.replay.ptr) == int(tr_sh.replay.ptr)
+    for k in tr_sh.replay.data:
+        np.testing.assert_allclose(np.asarray(tr_sh.replay.data[k]),
+                                   np.asarray(tr_pal.replay.data[k]),
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(tr_sh.last_metrics["critic_loss"]),
+        np.asarray(tr_pal.last_metrics["critic_loss"]),
+        rtol=1e-3, atol=1e-5)
+
+    # prioritized + dp placements compile and produce finite losses,
+    # now THROUGH the shard_map kernels (PER's score kernel + scatter;
+    # dp shards ring rows over BOTH mesh axes, exercising the
+    # tuple-axis psum_scatter). PER index selection stays discontinuous
+    # in float noise, so no cross-layout equality claim — see
+    # tests/test_sharded_megastep.py.
+    rops.reset_trace_counts()
+    for kw in ({"prioritized": True, "use_pallas": True},
+               {"placement": "dp", "use_pallas": True}):
         tr = SpreezeTrainer(_cfg(mesh=mesh, **kw))
         tr._warmup()
         _drive(tr, 1)
         assert np.isfinite(
             np.asarray(tr.last_metrics["critic_loss"])).all(), kw
+    assert rops.TRACE_COUNTS["shard:per_scores"] > 0, rops.TRACE_COUNTS
+    assert rops.TRACE_COUNTS["shard:priority_scatter"] > 0, \
+        rops.TRACE_COUNTS
     return True
 
 

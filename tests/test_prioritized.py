@@ -37,6 +37,72 @@ def test_unwritten_rows_never_sampled():
     assert int(idx.max()) < 5
 
 
+def test_unwritten_rows_never_sampled_mostly_empty():
+    """The regression the -inf mask fixes: with a 1e-12 priority floor a
+    mostly-empty pool scores empty slots at logp ~ -16.6, which Gumbel
+    noise out-draws with probability ~1 - (tiny) per draw — all-zero
+    rows then silently enter the update. The true -inf mask makes them
+    undrawable for EVERY key."""
+    st_ = _mk(4096)
+    st_ = per.add_batch(st_, _rows(3))
+    for seed in range(50):
+        _, idx, w = per.sample(st_, jax.random.PRNGKey(seed), 3)
+        assert int(idx.max()) < 3, (seed, np.asarray(idx))
+        assert np.isfinite(np.asarray(w)).all()
+
+
+def test_oversized_batch_cycles_live_rows():
+    """batch_size > live rows: the surplus draws wrap onto the live
+    draws (replacement only once the pool is exhausted) — never an
+    unwritten slot."""
+    st_ = _mk(128)
+    st_ = per.add_batch(st_, _rows(3))
+    for seed in range(20):
+        _, idx, w = per.sample(st_, jax.random.PRNGKey(seed), 8)
+        arr = np.asarray(idx)
+        assert (arr < 3).all(), (seed, arr)
+        assert set(arr.tolist()) == {0, 1, 2}   # every live row drawn
+        # the wrapped draws repeat the ranked live draws in order
+        np.testing.assert_array_equal(arr[3:6], arr[:3])
+        assert np.isfinite(np.asarray(w)).all()
+
+
+def test_zero_priority_rows_never_sampled():
+    """A written row whose priority was updated to exactly 0 (eps=0,
+    zero TD error) has sampling probability 0 — the -inf mask must
+    exclude it just like an unwritten slot."""
+    st_ = _mk(16)
+    st_ = per.add_batch(st_, _rows(8))
+    st_ = per.update_priorities(st_, jnp.asarray([2, 5]),
+                                jnp.zeros((2,)), eps=0.0)
+    for seed in range(30):
+        _, idx, _ = per.sample(st_, jax.random.PRNGKey(seed), 6)
+        arr = np.asarray(idx)
+        assert not np.isin(arr, [2, 5]).any(), (seed, arr)
+        assert (arr < 8).all()
+
+
+def test_importance_weights_match_dense_oracle_at_partial_fill():
+    """Dense numpy PER oracle at partial fill: probabilities normalize
+    over the 6 written rows only — the floored mass of the 10 empty
+    slots must not deflate live probabilities (the old bug biased w
+    upward for every live row whenever the pool wasn't full)."""
+    alpha, beta = 0.7, 0.5
+    st_ = _mk(16)
+    st_ = per.add_batch(st_, _rows(6))
+    pri = np.asarray([0.5, 1.0, 2.0, 4.0, 0.25, 1.5], np.float32)
+    st_ = per.update_priorities(st_, jnp.arange(6), jnp.asarray(pri),
+                                eps=0.0)
+    _, idx, w = per.sample(st_, jax.random.PRNGKey(3), 4,
+                           alpha=alpha, beta=beta)
+    arr = np.asarray(idx)
+    p = pri ** alpha
+    probs = p / p.sum()                       # live rows only
+    want = (6.0 * probs[arr]) ** (-beta)
+    want = want / want.max()
+    np.testing.assert_allclose(np.asarray(w), want, rtol=1e-5)
+
+
 def test_sampling_proportional_to_priority():
     """Rows with 10x priority are drawn ~10x more often (alpha=1)."""
     st_ = _mk(16)

@@ -87,22 +87,46 @@ def test_mesh_rejects_indivisible_q_ensemble():
         SpreezeTrainer(_cfg(mesh=mesh, algo="ddpg"))
 
 
-def test_mesh_with_pallas_switch_falls_back_to_jnp_ring():
-    """use_pallas + mesh: the ring kernels are single-device programs,
-    so both the eager warmup writes and the megastep must trace the jnp
-    scatter/gather instead (and still run correctly)."""
+def test_mesh_with_ambient_pallas_switch_runs_shard_map_ring():
+    """use_pallas + mesh: the trainer inherits the ambient switch at
+    construction (cfg.use_pallas=None) and pins it into the megastep
+    trace — which now runs the shard_map ring kernels on each group's
+    local ring shard instead of the old silent jnp fallback."""
     import numpy as np
     from repro.kernels import ops as kops
+    from repro.kernels import replay_ops as rops
     mesh = jax.make_mesh((1, 1), ("ac", "batch"),
                          devices=jax.devices()[:1])
+    rops.reset_trace_counts()
     with kops.use_pallas(True):
         tr = SpreezeTrainer(_cfg(mesh=mesh, rounds_per_dispatch=2))
         tr._warmup()
         (tr.state, tr.replay, tr.env_states, tr.key,
          tr.last_metrics) = tr._megastep(tr.state, tr.replay,
                                          tr.env_states, tr.key)
+    assert tr.use_pallas
+    assert rops.TRACE_COUNTS["shard:ring_write"] > 0, rops.TRACE_COUNTS
+    assert rops.TRACE_COUNTS["shard:ring_gather"] > 0, rops.TRACE_COUNTS
     assert np.isfinite(np.asarray(tr.last_metrics["critic_loss"])).all()
     assert int(tr.replay.size) > 0
+
+
+def test_trainer_pins_pallas_switch_against_ambient_drift():
+    """cfg.use_pallas=False must hold even when the caller flips the
+    ambient switch on before the first (lazy) megastep trace."""
+    from repro.kernels import ops as kops
+    from repro.kernels import replay_ops as rops
+    mesh = jax.make_mesh((1, 1), ("ac", "batch"),
+                         devices=jax.devices()[:1])
+    tr = SpreezeTrainer(_cfg(mesh=mesh, use_pallas=False))
+    rops.reset_trace_counts()
+    with kops.use_pallas(True):     # ambient on; trainer pinned off
+        tr._warmup()
+        (tr.state, tr.replay, tr.env_states, tr.key,
+         tr.last_metrics) = tr._megastep(tr.state, tr.replay,
+                                         tr.env_states, tr.key)
+    assert rops.TRACE_COUNTS["shard:ring_write"] == 0, rops.TRACE_COUNTS
+    assert rops.TRACE_COUNTS["ring_write"] == 0, rops.TRACE_COUNTS
 
 
 def test_eager_add_trace_not_shared_across_mesh_contexts():
