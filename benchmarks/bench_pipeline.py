@@ -36,7 +36,24 @@ nets make RNG a visible fraction; on TPU with production nets it is
 noise), so absolute Hz across that boundary aren't comparable — the
 fused/unfused RATIO is the stable signal and is unchanged (~3.3x).
 
-Run: ``PYTHONPATH=src python -m benchmarks.bench_pipeline [--seconds S]``.
+``--mode queue`` records the paper's Fig. 4a shared-memory-vs-queue gap
+as its own regression surface (``BENCH_queue.json``): the same probe on
+the host-queue transfer (device->host dump, bounded deque, re-upload —
+both endpoints block) vs the shared-memory eager loop, including the
+host queue's Table-3 columns (``transfer_cycle`` seconds between drains
+and ``transmission_loss`` — the fraction of sampled frames dropped on
+queue overflow). The queue arm uses multi-frame chunks into a queue a
+few chunks deep, so the drain cycle spans several rounds (stale, bursty
+handoffs — the Fig. 4a pathology) instead of the dispatch-bound 1-frame
+probe's degenerate empty queue. Note ``transmission_loss`` is
+structurally 0 on this geometry: the single-threaded eager loop flushes
+after every push, so occupancy tops out at the drain threshold, far
+below the cap. The column is tracked as an invariant — it regressing to
+nonzero means the loop started dropping experience (e.g. a flush
+reordering), exactly what the surface should flag.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_pipeline [--seconds S]
+[--mode shared|queue]``.
 """
 from __future__ import annotations
 
@@ -46,7 +63,8 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import (child_pythonpath, emit,
+                               xla_flags_force_devices)
 from repro.core import SpreezeConfig, SpreezeTrainer
 from repro.rl.base import AlgoHP
 
@@ -80,6 +98,72 @@ def run_arm(fused: bool, seconds: float, rpd: int, repeats: int,
             "update_frame_hz": round(hist.update_frame_hz, 1)}
 
 
+def run_transfer_arm(transfer: str, seconds: float, repeats: int,
+                     queue_size: int = 256) -> dict:
+    """One eager-loop arm on the given transfer path, with a geometry
+    that makes the queue pathology observable: 32-frame sampler chunks
+    into a 256-frame queue (drain threshold 128), so the handoff waits
+    for a multi-round load and experience reaches the updater in
+    stale, bursty batches — the Fig. 4a semantics. On this CPU
+    container the host round-trip is cheap, so the paper's throughput
+    collapse shows up in ``blocked_time_s`` (host time both endpoints
+    lose to the dump/upload — identically 0 on the shared path) and
+    ``transfer_cycle_s`` rather than necessarily in rounds/s; all
+    three are the tracked columns."""
+    from repro.core.transfer import make_transfer
+
+    cfg = SpreezeConfig(
+        env_name="pendulum", algo="sac", num_envs=4, batch_size=32,
+        chunk_len=8, updates_per_round=1, warmup_frames=64,
+        replay_capacity=4096, eval_every_rounds=10**9,
+        transfer=transfer, queue_size=queue_size, fused=False,
+        hp=AlgoHP(algo="sac", hidden=(32, 32)))
+    tr = SpreezeTrainer(cfg)
+    tr.train(max_seconds=0.01)
+    runs = []
+    for _ in range(repeats):
+        tr.total_frames = 0
+        tr.total_updates = 0
+        # fresh transfer per repeat: the host-queue counters (blocked
+        # time, cycle times, offered/dropped frames) are cumulative, so
+        # a shared instance would report warmup + every earlier repeat
+        # in whichever run lands as the median
+        tr.transfer = make_transfer(cfg.transfer, cfg.queue_size)
+        runs.append(tr.train(max_seconds=seconds))
+    hist = sorted(runs, key=lambda h: h.update_hz)[len(runs) // 2]
+    return {"transfer": transfer,
+            "rounds_per_s": round(hist.update_hz / cfg.updates_per_round, 1),
+            "sampling_hz": round(hist.sampling_hz, 1),
+            "update_hz": round(hist.update_hz, 1),
+            "update_frame_hz": round(hist.update_frame_hz, 1),
+            "transfer_cycle_s": round(
+                hist.transfer_stats.get("transfer_cycle_s", 0.0), 6),
+            "transmission_loss": round(
+                hist.transfer_stats.get("transmission_loss", 0.0), 4),
+            "blocked_time_s": round(
+                hist.transfer_stats.get("blocked_time_s", 0.0), 4)}
+
+
+def main_queue(seconds: float = 2.0, repeats: int = 3,
+               out: str = os.path.join(ROOT, "BENCH_queue.json")) -> dict:
+    """--mode queue: the shared-memory-vs-host-queue gap (paper Fig. 4a)
+    as a tracked surface — same eager loop, only the transfer differs."""
+    shared = run_transfer_arm("shared", seconds, repeats)
+    queue = run_transfer_arm("queue", seconds, repeats)
+    ratio = queue["rounds_per_s"] / max(shared["rounds_per_s"], 1e-9)
+    emit("queue", "shared_eager", **shared)
+    emit("queue", "queue", **queue)
+    emit("queue", "gap", queue_over_shared_rounds_per_s=round(ratio, 3))
+    report = {"env": "pendulum", "algo": "sac",
+              "seconds_per_arm": seconds,
+              "shared_eager": shared, "queue": queue,
+              "queue_over_shared_rounds_per_s": round(ratio, 3)}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
+
+
 def sharded_child(seconds: float, rpd: int, repeats: int, out: str):
     """Child-process entry (8 forced host devices): sharded mesh arm vs
     replicated single-device arm, dumped to ``out`` as JSON."""
@@ -99,27 +183,14 @@ def sharded_child(seconds: float, rpd: int, repeats: int, out: str):
         json.dump(rec, f)
 
 
-def _xla_flags_force_devices(n: int) -> str:
-    """Inherited XLA_FLAGS with the host device count forced to ``n``
-    (user tuning flags survive, so parent and child arms stay
-    comparable)."""
-    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
-             if "xla_force_host_platform_device_count" not in f]
-    flags.append(f"--xla_force_host_platform_device_count={n}")
-    return " ".join(flags)
-
-
 def run_sharded_comparison(seconds: float, rpd: int, repeats: int) -> dict:
     """Spawn the 8-device child (XLA_FLAGS must precede jax init there)."""
     import tempfile
 
     out = os.path.join(tempfile.mkdtemp(prefix="spreeze_bench_"),
                        "sharded.json")
-    pypath = os.pathsep.join(
-        p for p in (os.path.join(ROOT, "src"),
-                    os.environ.get("PYTHONPATH", "")) if p)
-    env = dict(os.environ, PYTHONPATH=pypath,
-               XLA_FLAGS=_xla_flags_force_devices(8))
+    env = dict(os.environ, PYTHONPATH=child_pythonpath(),
+               XLA_FLAGS=xla_flags_force_devices(8))
     # 2 arms x (warmup + repeats) timed windows + 8-device compile slack
     budget = max(1200, int(2 * (repeats + 1) * seconds) + 600)
     try:
@@ -174,12 +245,17 @@ if __name__ == "__main__":
                     help="timed repeats per arm (median reported)")
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the 8-device sharded-vs-replicated child")
+    ap.add_argument("--mode", choices=("shared", "queue"), default="shared",
+                    help="shared: fused-vs-eager (BENCH_pipeline.json); "
+                         "queue: host-queue baseline (BENCH_queue.json)")
     ap.add_argument("--sharded-child", default=None, metavar="OUT",
                     help=argparse.SUPPRESS)   # internal child-process mode
     args = ap.parse_args()
     if args.sharded_child:
         sharded_child(args.seconds, args.rpd, args.repeats,
                       args.sharded_child)
+    elif args.mode == "queue":
+        main_queue(seconds=args.seconds, repeats=args.repeats)
     else:
         main(seconds=args.seconds, rpd=args.rpd, repeats=args.repeats,
              sharded=not args.no_sharded)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.kernels import ops as kops
 from repro.kernels import replay_ops as rops
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -78,6 +79,64 @@ def bench_ring_gather(cap, bsz, feat, iters) -> dict:
     return rec, ok
 
 
+def bench_per_topk(cap, k, iters) -> dict:
+    """Fused score+select kernel vs the PR-3 path (score pass + global
+    ``lax.top_k`` on the materialized (cap,) vector) vs the dense jnp
+    oracle. Scores must match the oracle bit-for-bit; indices match on
+    every finite-score slot (-inf slots carry ``IDX_SENTINEL`` in the
+    kernel — unspecified and unused, see ``replay.prioritized``). Also
+    oracle-checks the two-phase form itself (4 windows + candidate
+    merge == dense top-k) and, when the process has >= 8 devices (the
+    sharded CI job), the ``per_topk_sharded`` mesh wrapper."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    pri = jnp.where(jax.random.uniform(k1, (cap,)) > 0.5,
+                    jax.random.uniform(k1, (cap,)) + 0.1, 0.0)
+    g = jax.random.gumbel(k2, (cap,))
+    want_v, want_i = rops.per_topk_ref(pri, g, 0.6, k)
+    fin = np.isfinite(np.asarray(want_v))
+
+    def check_sel(name, got) -> bool:
+        v, i = got
+        ok = _check(f"per_topk/{name}/scores", v, want_v)
+        ok &= _check(f"per_topk/{name}/idx", np.asarray(i)[fin],
+                     np.asarray(want_i)[fin])
+        return ok
+
+    arms = {
+        "blocked": jax.jit(lambda p, n: rops.per_topk(p, n, 0.6, k)),
+        "global_topk": jax.jit(
+            lambda p, n: jax.lax.top_k(rops.per_scores(p, n, 0.6), k)),
+        "jnp": jax.jit(lambda p, n: rops.per_topk_ref(p, n, 0.6, k)),
+    }
+    rec, ok = {}, True
+    for name, fn in arms.items():
+        ok &= check_sel(name, fn(pri, g))
+        rec[f"{name}_ms"] = round(
+            time_call(lambda fn=fn: fn(pri, g), iters) * 1e3, 3)
+
+    # two-phase oracle: 4 window-local top-k's + fixed-order merge must
+    # equal the dense global top-k (the layout-invariance identity)
+    rows = cap // 4
+    cand = [rops.per_topk(pri[lo:lo + rows], g[lo:lo + rows], 0.6, k,
+                          window_start=lo) for lo in range(0, cap, rows)]
+    mv, mi = rops.merge_topk_candidates(
+        jnp.concatenate([c[0] for c in cand]),
+        jnp.concatenate([c[1] for c in cand]), k)
+    ok &= check_sel("two_phase_merge", (mv, mi))
+
+    if len(jax.devices()) >= 8:
+        from repro.distributed.sharding import trainer_rules, use_rules
+        from repro.launch.mesh import make_ac_mesh
+        rules = trainer_rules(make_ac_mesh(2, 4), "ac")
+        with use_rules(rules):
+            sv, si = jax.jit(lambda p, n: kops.per_topk_sharded(
+                p, n, 0.6, k, rules))(pri, g)
+        sharded_ok = check_sel("sharded", (sv, si))
+        rec["sharded_ok"] = bool(sharded_ok)
+        ok &= sharded_ok
+    return rec, ok
+
+
 def bench_per_scores(cap, iters) -> dict:
     k1, k2 = jax.random.split(jax.random.PRNGKey(2))
     # half-empty pool: the masked (-inf) path is exercised, not skipped
@@ -100,24 +159,26 @@ def bench_per_scores(cap, iters) -> dict:
 def main(tiny: bool = False,
          out: str = os.path.join(ROOT, "BENCH_replay_kernels.json")) -> bool:
     if tiny:
-        cap, n, bsz, feat, iters = 2048, 256, 256, 8, 2
+        cap, n, bsz, feat, iters, k = 2048, 256, 256, 8, 2, 64
     else:
-        cap, n, bsz, feat, iters = 16384, 1024, 1024, 16, 3
+        cap, n, bsz, feat, iters, k = 16384, 1024, 1024, 16, 3, 256
     cfg = {"capacity": cap, "write_rows": n, "gather_rows": bsz,
-           "features": feat, "tiny": tiny,
+           "features": feat, "topk": k, "tiny": tiny,
            "backend": jax.default_backend(),
            "interpret": jax.default_backend() != "tpu"}
     write_rec, ok_w = bench_ring_write(cap, n, feat, iters)
     gather_rec, ok_g = bench_ring_gather(cap, bsz, feat, iters)
     per_rec, ok_p = bench_per_scores(cap, iters)
-    oracle_ok = bool(ok_w and ok_g and ok_p)
+    topk_rec, ok_t = bench_per_topk(cap, k, iters)
+    oracle_ok = bool(ok_w and ok_g and ok_p and ok_t)
     emit("replay_kernels", "ring_write", **write_rec)
     emit("replay_kernels", "ring_gather", **gather_rec)
     emit("replay_kernels", "per_scores", **per_rec)
+    emit("replay_kernels", "per_topk", **topk_rec)
     emit("replay_kernels", "oracle", ok=oracle_ok)
     report = {"config": cfg, "ring_write": write_rec,
               "ring_gather": gather_rec, "per_scores": per_rec,
-              "oracle_ok": oracle_ok}
+              "per_topk": topk_rec, "oracle_ok": oracle_ok}
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

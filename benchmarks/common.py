@@ -1,6 +1,7 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, child-process env."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -14,6 +15,27 @@ def emit(table: str, name: str, **fields):
     ROWS.append(row)
     kv = " ".join(f"{k}={v}" for k, v in fields.items())
     print(f"[{table}] {name}: {kv}", flush=True)
+
+
+def child_pythonpath() -> str:
+    """PYTHONPATH for a child-process bench arm: the repo's ``src``
+    prepended to whatever the parent inherited (child entry points
+    import ``repro`` before any path fixup can run)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    os.environ.get("PYTHONPATH", "")) if p)
+
+
+def xla_flags_force_devices(n: int) -> str:
+    """Inherited XLA_FLAGS with the host device count forced to ``n``
+    (user tuning flags survive, so parent and child arms stay
+    comparable). For child processes that need a multi-device host —
+    the flag must be set before the child's first jax import."""
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    return " ".join(flags)
 
 
 def time_call(fn: Callable[[], object], iters: int = 5,

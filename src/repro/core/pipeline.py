@@ -237,6 +237,18 @@ class SpreezeTrainer:
             raise ValueError(f"batch_size {cfg.batch_size} must be "
                              f"divisible by the {rows} ring shards for "
                              f"the mesh-native Pallas ring kernels")
+        if (self.use_pallas and cfg.prioritized
+                and cfg.batch_size > cfg.replay_capacity // max(rows, 1)):
+            # group-local PER: each of the ``rows`` groups emits
+            # batch_size top-k candidates from its own ring shard, so
+            # the shard must hold at least batch_size rows — otherwise
+            # the two-phase select would silently fall back to the
+            # global jnp top_k (same opt-in policy as above)
+            raise ValueError(
+                f"prioritized batch_size {cfg.batch_size} exceeds the "
+                f"per-group ring shard "
+                f"({cfg.replay_capacity} // {rows} rows) — group-local "
+                f"PER selection needs batch_size <= capacity // groups")
 
     def _rules(self):
         return trainer_rules(self.cfg.mesh, self.cfg.placement)

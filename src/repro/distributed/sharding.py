@@ -152,7 +152,12 @@ def trainer_rules(mesh: Mesh, placement: str = "ac") -> MeshRules:
 def batch_axes(rules: MeshRules) -> Tuple[str, ...]:
     """The physical mesh axes the ``batch`` logical dim maps to, as a
     tuple (empty when unmapped) — the axis set the shard_map replay
-    kernels shard rows over and psum_scatter across."""
+    kernels shard rows over, psum_scatter across, and all_gather the
+    PER top-k candidates over. Contract: an ``all_gather`` over this
+    tuple concatenates row-major (first axis most significant), the
+    same flattening ``batch_group_index`` computes — the PER candidate
+    merge (``kernels.replay_ops.merge_topk_candidates``) relies on the
+    two orders agreeing for its layout-invariant tie-breaking."""
     b = rules.batch
     if b is None:
         return ()

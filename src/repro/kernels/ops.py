@@ -39,6 +39,8 @@ from repro.kernels._compat import interpret_default
 
 # re-exported jnp oracles (single source of truth for both paths)
 per_scores_ref = _replay.per_scores_ref
+per_topk_ref = _replay.per_topk_ref
+merge_topk_candidates = _replay.merge_topk_candidates
 
 _USE_PALLAS: contextvars.ContextVar[bool] = contextvars.ContextVar(
     "use_pallas", default=False)
@@ -122,6 +124,13 @@ def priority_scatter(priorities, idx, values) -> jax.Array:
     return _replay.priority_scatter(priorities, idx, values)
 
 
+@functools.partial(jax.jit, static_argnames=("alpha", "k"))
+def per_topk(priorities, gumbel, alpha: float, k: int):
+    """Fused PER score + top-k selection — the (capacity,) score vector
+    never materializes. -> (scores (k,), global indices (k,))."""
+    return _replay.per_topk(priorities, gumbel, alpha, k)
+
+
 # --------------------------------------------------------------------------- #
 # replay ring: shard_map wrappers over the ("ac","batch") trainer mesh
 # --------------------------------------------------------------------------- #
@@ -187,6 +196,38 @@ def per_scores_sharded(priorities, gumbel, alpha: float,
 
     return shard_map(local, mesh=rules.mesh,
                      in_specs=(spec, spec), out_specs=spec,
+                     check_rep=False)(priorities, gumbel)
+
+
+def per_topk_sharded(priorities, gumbel, alpha: float, k: int,
+                     rules: MeshRules):
+    """Mesh-native two-phase PER selection (the ROADMAP's RDMA-local
+    sampling): each batch group runs the fused ``per_topk`` kernel on
+    its local priority shard (window offset = its first global ring
+    slot) and emits k candidates ``(score, global_idx)``; an
+    ``all_gather`` of the ``(groups * k,)`` candidates over the batch
+    axes — the ONLY cross-group traffic, never capacity-proportional —
+    feeds the fixed-group-order merge, which every group evaluates
+    identically, so the selected index vector comes back replicated and
+    the downstream gather/scatter stay group-local. The all_gather's
+    concatenation order over the axis tuple is row-major, matching
+    ``batch_group_index``, which is what pins the merge's tie order and
+    makes the draw layout-invariant."""
+    _replay.TRACE_COUNTS["shard:per_topk"] += 1
+    groups = rules.axis_size(rules.batch)
+    rows_local = priorities.shape[0] // groups
+    axes = batch_axes(rules)
+    spec = P(rules.batch)
+
+    def local(p, g):
+        lo = batch_group_index(rules) * rows_local
+        s, i = _replay.per_topk(p, g, alpha, k, window_start=lo)
+        cs = jax.lax.all_gather(s, axes, axis=0, tiled=True)
+        ci = jax.lax.all_gather(i, axes, axis=0, tiled=True)
+        return _replay.merge_topk_candidates(cs, ci, k)
+
+    return shard_map(local, mesh=rules.mesh,
+                     in_specs=(spec, spec), out_specs=(P(), P()),
                      check_rep=False)(priorities, gumbel)
 
 

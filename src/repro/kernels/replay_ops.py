@@ -21,6 +21,22 @@ rows into blocks and pipeline the HBM<->VMEM traffic with
   DMAs instead of issue-wait-issue-wait.
 * ``per_scores`` — blocked elementwise pass producing the Gumbel-top-k
   sampling scores for the PER pool (empty slots masked to a true -inf).
+  Kept as the bench baseline for ``per_topk`` (score pass + a global
+  ``jax.lax.top_k`` over the materialized score vector).
+* ``per_topk`` — the fused score + selection kernel: each block's
+  Gumbel scores are computed in VMEM and folded into a running top-k
+  held in a VMEM scratch of size k (a vectorized sorted insert: the
+  block is concatenated with the running buffer and re-selected, with
+  a threshold guard skipping blocks that cannot contribute), so the
+  globally-assembled ``(capacity,)`` score vector never exists in HBM.
+  Under ``shard_map`` each batch group emits its local k candidates
+  ``(score, global_idx)`` and ``merge_topk_candidates`` reduces the
+  ``(groups * k,)`` gathered candidates — selection is group-local and
+  the only cross-group PER traffic is k candidates per group, never
+  anything proportional to capacity. Because the merge runs in a fixed
+  group order with stable ties, the two-phase selection is exactly the
+  dense ``top_k`` on live rows: PER draws are layout-invariant across
+  mesh shapes (see ``replay.prioritized``).
 * ``priority_scatter`` — scatter of new |TD|+eps priorities at the
   sampled (arbitrary) indices.
 
@@ -375,6 +391,146 @@ def per_scores(priorities: jax.Array, gumbel: jax.Array, alpha: float, *,
         interpret=resolve_interpret(interpret),
     )(p2, g2)
     return out.reshape(nb * blk)[:rows]
+
+
+# --------------------------------------------------------------------------- #
+# PER: fused score + top-k selection (group-local index selection)
+# --------------------------------------------------------------------------- #
+
+# Index carried by top-k slots that hold no real row (score -inf): the
+# running buffer's initial fill, and block-padding lanes. Among equal
+# -inf scores the selected index is unspecified (callers cycle the live
+# draws and never dereference a -inf slot — ``replay.prioritized``), so
+# the sentinel only has to stay out of the live index range.
+IDX_SENTINEL = 2**31 - 1
+
+
+def per_topk_ref(priorities: jax.Array, gumbel: jax.Array, alpha: float,
+                 k: int, *, window_start=0):
+    """jnp oracle for ``per_topk``: dense Gumbel-top-k over the window.
+
+    Returns ``(scores (k,), global_idx (k,))`` sorted by descending
+    score. Indices of -inf entries (fewer than k live rows in the
+    window) are real here but a sentinel in the kernel — compare them
+    only where the score is finite."""
+    v, i = jax.lax.top_k(per_scores_ref(priorities, gumbel, alpha), k)
+    return v, (i + jnp.asarray(window_start, jnp.int32)).astype(jnp.int32)
+
+
+def merge_topk_candidates(cand_scores: jax.Array, cand_idx: jax.Array,
+                          k: int):
+    """Reduce ``(groups * k,)`` per-group candidates to the global top-k.
+
+    The candidate vectors MUST be concatenated in the fixed batch-group
+    order (``all_gather`` over ``sharding.batch_axes`` — row-major, the
+    same order ``batch_group_index`` flattens); with that order and
+    ``top_k``'s stable ties the merge returns exactly the dense top-k
+    over the whole pool, which is what makes PER draws layout-invariant:
+    the global top-k is always a subset of the union of per-group
+    top-k's, so no candidate the merge needs can be missing."""
+    v, pos = jax.lax.top_k(cand_scores, k)
+    return v, jnp.take(cand_idx, pos)
+
+
+def _per_topk_kernel(scal_ref, pri_ref, gum_ref, outs_ref, outi_ref, *,
+                     alpha: float, k: int, rows: int, blk: int):
+    """Streaming top-k over the (nb, blk)-blocked priority/gumbel pair.
+
+    The running top-k lives in the (1, k) VMEM outputs; per block the
+    scores are computed in VMEM from the double-buffered block loads
+    and folded in with a vectorized sorted insert (concat + re-select).
+    A threshold guard (block max vs the current k-th best) skips the
+    insert for blocks that cannot change the result — on a warm buffer
+    most blocks only pay the elementwise score pass."""
+    nb = pri_ref.shape[0]
+    lo = scal_ref[0]
+    outs_ref[...] = jnp.full((1, k), -jnp.inf, jnp.float32)
+    outi_ref[...] = jnp.full((1, k), IDX_SENTINEL, jnp.int32)
+
+    def body(scratch, sems):
+        def fetch(slot, b):
+            return (pltpu.make_async_copy(pri_ref.at[pl.ds(b, 1), :],
+                                          scratch.at[slot, 0],
+                                          sems.at[slot, 0]),
+                    pltpu.make_async_copy(gum_ref.at[pl.ds(b, 1), :],
+                                          scratch.at[slot, 1],
+                                          sems.at[slot, 1]))
+
+        for cp in fetch(0, 0):
+            cp.start()
+
+        def loop(b, carry):
+            slot = jax.lax.rem(b, 2)
+
+            @pl.when(b + 1 < nb)
+            def _prefetch():        # overlap next fetch with this fold
+                for cp in fetch(jax.lax.rem(b + 1, 2), b + 1):
+                    cp.start()
+
+            for cp in fetch(slot, b):
+                cp.wait()
+            p, g = scratch[slot, 0], scratch[slot, 1]
+            lane = (jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+                    + b * blk)
+            valid = lane < rows          # block-padding lanes are dead
+            s = jnp.where(valid, per_scores_ref(p, g, alpha), -jnp.inf)
+            gidx = jnp.where(valid, lane + lo, IDX_SENTINEL)
+
+            @pl.when(jnp.max(s) > outs_ref[0, k - 1])
+            def _fold():                 # sorted insert, vectorized:
+                cs = jnp.concatenate([outs_ref[...], s], axis=1)
+                ci = jnp.concatenate([outi_ref[...], gidx], axis=1)
+                v, pos = jax.lax.top_k(cs, k)
+                outs_ref[...] = v
+                outi_ref[...] = jnp.take_along_axis(ci, pos, axis=1)
+            return carry
+
+        jax.lax.fori_loop(0, nb, loop, 0)
+
+    pl.run_scoped(
+        body,
+        scratch=pltpu.VMEM((2, 2, 1, blk), jnp.float32),
+        sems=pltpu.SemaphoreType.DMA((2, 2)))
+
+
+def per_topk(priorities: jax.Array, gumbel: jax.Array, alpha: float,
+             k: int, *, window_start=0, block: int = 4096,
+             interpret: Optional[bool] = None):
+    """Fused PER selection: Gumbel-top-k scores + running top-k in one
+    blocked pass over the (rows,) priority window.
+
+    Returns ``(scores (k,), global_idx (k,))`` — the window's k best
+    live candidates, indices offset by ``window_start`` so each mesh
+    group emits globally-addressed candidates for the cross-group merge
+    (``merge_topk_candidates``). Matches ``per_topk_ref`` exactly on
+    every finite-score slot; -inf slots carry ``IDX_SENTINEL`` (their
+    index is unspecified and unused — draws past the live-row count
+    cycle the live draws)."""
+    (rows,) = priorities.shape
+    if k > rows:
+        raise ValueError(f"per_topk of k={k} from a {rows}-row window")
+    TRACE_COUNTS["per_topk"] += 1
+    blk = max(128, min(block, rows))
+    pad = (-rows) % blk
+    p2 = jnp.pad(priorities, (0, pad)) if pad else priorities
+    g2 = jnp.pad(gumbel, (0, pad)) if pad else gumbel
+    nb = p2.shape[0] // blk
+    p2, g2 = p2.reshape(nb, blk), g2.reshape(nb, blk)
+    outs, outi = pl.pallas_call(
+        functools.partial(_per_topk_kernel, alpha=alpha, k=k, rows=rows,
+                          blk=blk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(pl.BlockSpec(memory_space=pltpu.VMEM),
+                   pl.BlockSpec(memory_space=pltpu.VMEM)),
+        out_shape=(jax.ShapeDtypeStruct((1, k), jnp.float32),
+                   jax.ShapeDtypeStruct((1, k), jnp.int32)),
+        interpret=resolve_interpret(interpret),
+    )(jnp.asarray(window_start, jnp.int32).reshape(1), p2, g2)
+    return outs.reshape(k), outi.reshape(k)
 
 
 def _priority_scatter_kernel(lo_ref, idx_ref, val_ref, pri_ref, out_ref, *,

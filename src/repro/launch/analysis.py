@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
@@ -35,6 +35,14 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 # one HLO array type, e.g. bf16[16,256,960]{2,1,0}
 _TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# "name = TYPE op(..." — the shared result-side line parser for the
+# collective censuses below. Optional ROOT prefix (a collective that is
+# a computation root must still be counted); the lazy TYPE group admits
+# nested tuple types like "((f32[2]{0}), (f32[2]{0}))" — safe because
+# HLO type text never contains " word(" before the op name.
+_COLLECTIVE_LINE_RE = re.compile(
+    r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)\(")
 
 
 def cost_dict(compiled) -> Dict:
@@ -66,29 +74,70 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 
     Result bytes ~ data received per device per op execution; ops inside
     while loops (the layer scan) execute L times — the scan trip count is
-    applied by the caller via ``scan_multiplier`` when known.
+    applied by the caller via ``scan_multiplier`` when known. Async
+    pairs count once — ``*-done`` skipped, and a tuple-result
+    ``*-start`` drops its FIRST array (the aliased operand): for the
+    common (operand, destination) pair that leaves exactly the
+    destination; for combined multi-operand starts it deliberately
+    over-counts (keeps the extra operands) rather than hide a
+    destination — conservative for the capacity assertions built on
+    these censuses.
     """
     out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
     out["count"] = 0
     for line in hlo_text.splitlines():
-        s = line.strip()
         # result side: "%name = TYPE all-gather(...)" (also fusions wrapping)
-        m = re.match(r"%?[\w.\-]+ = (\(?[^)]*?\)?) ([a-z\-]+)\(", s)
+        m = _COLLECTIVE_LINE_RE.match(line.strip())
         if not m:
             continue
         op = m.group(2)
-        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
-                op in _COLLECTIVES:
-            base = op
-            for c in _COLLECTIVES:
-                if op.startswith(c):
-                    base = c
-                    break
-            else:
-                continue
-            out[base] += _type_bytes(m.group(1))
-            out["count"] += 1
+        if op.endswith("-done"):
+            continue
+        for base in _COLLECTIVES:
+            if op.startswith(base):
+                arrays = [tm.group(0) for tm in _TYPE_RE.finditer(m.group(1))
+                          if tm.group(1) in _DTYPE_BYTES]
+                if op.endswith("-start") and len(arrays) > 1:
+                    arrays = arrays[1:]
+                out[base] += sum(_type_bytes(a) for a in arrays)
+                out["count"] += 1
+                break
     out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def collective_result_shapes(hlo_text: str
+                             ) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Every collective op's (kind, result dims) in the HLO text, one
+    entry per result array. The shape-level sibling of
+    ``collective_bytes``: lets a bench assert *what* crosses the
+    interconnect, not just how much — e.g. that a replay path adds no
+    collective whose result is proportional to the pool capacity
+    (``benchmarks/roofline.py``). Async pairs count once: ``*-done``
+    lines are skipped, and a ``*-start`` whose result is the XLA
+    (operand, destination, ...) tuple drops its FIRST array — for the
+    common pair that removes exactly the aliased operand (which would
+    misreport e.g. a sub-capacity reduce-scatter over a capacity-sized
+    operand as a capacity-sized transfer), while a combined
+    multi-operand start errs toward keeping extra arrays rather than
+    hiding a destination from the capacity assertion."""
+    out: List[Tuple[str, Tuple[int, ...]]] = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.match(line.strip())
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        for base in _COLLECTIVES:
+            if op.startswith(base):
+                shapes = [tuple(int(d) for d in tm.group(2).split(",") if d)
+                          for tm in _TYPE_RE.finditer(m.group(1))
+                          if tm.group(1) in _DTYPE_BYTES]
+                if op.endswith("-start") and len(shapes) > 1:
+                    shapes = shapes[1:]
+                out.extend((base, s) for s in shapes)
+                break
     return out
 
 

@@ -44,6 +44,22 @@ def _ring_mode(cap_rows: int, sample_rows=None) -> str:
     return "shard"
 
 
+def _per_select_mode(cap_rows: int, k: int) -> str:
+    """Dispatch for the PER two-phase top-k selection: like
+    ``_ring_mode``, but the ``"shard"`` path additionally needs every
+    batch group's ring shard to hold at least ``k`` rows — each group
+    emits ``k`` candidates, and fewer rows than candidates would drop
+    live rows from the merge (the global top-k is only guaranteed to be
+    covered when every group can surface its full k)."""
+    mode = _ring_mode(cap_rows)
+    if mode != "shard":
+        return mode
+    r = current_rules()
+    if k > cap_rows // r.axis_size(r.batch):
+        return "jnp"
+    return mode
+
+
 class ReplayState(NamedTuple):
     data: Dict[str, jax.Array]     # each (capacity, ...) leaf
     ptr: jax.Array                 # int32 next write slot

@@ -21,10 +21,23 @@ importance weights normalize over the written rows only, so a
 partially-filled pool doesn't deflate the live probabilities with the
 phantom mass of empty capacity slots.
 
-Under ``use_pallas`` the score pass and the re-prioritization scatter run
-as blocked Pallas kernels (``kernels.replay_ops``), shard_map'd over the
-mesh batch axes when rules are active — same dispatch as the ring
-scatter/gather (see ``buffer._ring_mode``).
+Two-phase selection (group-local PER): index selection routes through
+``_select`` in every mode — each batch group (one group when meshless)
+runs a top-k over its OWN priority shard and only ``(groups * k,)``
+candidate pairs cross the batch axis for the merge; the globally
+assembled ``(capacity,)`` score vector never exists. Under ``use_pallas``
+the per-group pass is the fused ``per_topk`` kernel (score + running
+top-k in one blocked VMEM pass) shard_map'd over the mesh batch axes
+(``kernels.ops.per_topk_sharded``); the jnp oracle is the dense
+``per_topk_ref`` (two-phase with a single group — bit-identical, since
+the merge in fixed group order with stable ties IS the dense top-k over
+live rows). That identity is the layout-invariance guarantee: given the
+same pool state and key, PER draws the same batch on (1,1), (1,8), or
+(2,4) meshes, pallas or jnp (``jax_threefry_partitionable`` keeps the
+Gumbel noise itself layout-invariant). The re-prioritization scatter and
+the importance-weight gather are likewise group-local — no PER op moves
+capacity-proportional data across groups (``benchmarks/roofline.py``
+asserts it on the lowered HLO).
 """
 from __future__ import annotations
 
@@ -36,8 +49,8 @@ import jax.numpy as jnp
 from repro.distributed.sharding import current_rules, shard
 from repro.kernels import ops as kops
 from repro.replay.buffer import (ReplayState, _pallas_keyed_jit,
-                                 _ring_mode, gather_rows, init_replay,
-                                 scatter_rows, write_plan)
+                                 _per_select_mode, _ring_mode, gather_rows,
+                                 init_replay, scatter_rows, write_plan)
 
 
 class PrioritizedState(NamedTuple):
@@ -70,17 +83,25 @@ def add_batch(state: PrioritizedState, batch: Dict[str, jax.Array]
                             max_priority=state.max_priority)
 
 
-def _scores(priorities: jax.Array, gumbel: jax.Array,
-            alpha: float) -> jax.Array:
-    """Sampling scores via the Pallas kernel or the jnp oracle (same
-    formula — ``per_scores_ref`` — so both paths draw identically)."""
-    mode = _ring_mode(priorities.shape[0])
+def _select(priorities: jax.Array, gumbel: jax.Array, alpha: float,
+            k: int):
+    """Two-phase PER index selection -> (scores (k,), indices (k,)).
+
+    Phase 1 is group-local: each batch group top-k's its own priority
+    shard (the fused ``per_topk`` kernel under ``use_pallas``, the dense
+    ``per_topk_ref`` oracle otherwise). Phase 2 merges the
+    ``(groups * k,)`` candidates in fixed group order
+    (``merge_topk_candidates``) — with a single group the merge is the
+    identity, so every mode computes the same dense top-k over live
+    rows and PER draws are layout-invariant. ``"shard"`` requires each
+    group's shard to hold >= k rows (``buffer._per_select_mode``)."""
+    mode = _per_select_mode(priorities.shape[0], k)
     if mode == "pallas":
-        return kops.per_scores(priorities, gumbel, alpha)
+        return kops.per_topk(priorities, gumbel, alpha, k)
     if mode == "shard":
-        return kops.per_scores_sharded(priorities, gumbel, alpha,
-                                       current_rules())
-    return kops.per_scores_ref(priorities, gumbel, alpha)
+        return kops.per_topk_sharded(priorities, gumbel, alpha, k,
+                                     current_rules())
+    return kops.per_topk_ref(priorities, gumbel, alpha, k)
 
 
 def sample(state: PrioritizedState, key, batch_size: int, *,
@@ -94,12 +115,18 @@ def sample(state: PrioritizedState, key, batch_size: int, *,
     the live-row count the surplus draws cycle through the live draws
     (replacement kicks in only once the pool is exhausted). The pool
     must hold at least one written row (warmup guarantees it).
+
+    Selection is the two-phase group-local top-k (``_select``) — the
+    drawn indices are identical across mesh layouts and across the
+    pallas/jnp paths. Every capacity-sized intermediate here is
+    elementwise on (or gathered group-locally from) the sharded
+    priority vector, so sampling adds no capacity-proportional
+    cross-group traffic.
     """
-    g = -jnp.log(-jnp.log(
+    g = shard(-jnp.log(-jnp.log(
         jax.random.uniform(key, state.priorities.shape,
-                           minval=1e-12, maxval=1.0)))
-    idx = jax.lax.top_k(_scores(state.priorities, g, alpha),
-                        batch_size)[1]
+                           minval=1e-12, maxval=1.0))), "batch")
+    idx = _select(state.priorities, g, alpha, batch_size)[1]
     # every live row outranks every -inf empty slot, so draws past the
     # live count are garbage — wrap them onto the live draws
     live = state.priorities > 0.0
@@ -110,10 +137,14 @@ def sample(state: PrioritizedState, key, batch_size: int, *,
     # importance weights: w_i = (N * P(i))^-beta, normalized by max.
     # P(i) normalizes over the WRITTEN rows only — the 1e-12-floored
     # mass of empty capacity slots used to bias live-row weights
-    # whenever the pool wasn't full.
+    # whenever the pool wasn't full. The sampled rows' priority mass is
+    # fetched with the same group-local windowed gather as the data
+    # rows: indexing the sharded (capacity,) prob vector directly would
+    # make GSPMD all-gather it.
     p = jnp.where(live, jnp.maximum(state.priorities, 1e-12) ** alpha, 0.0)
-    probs = p / jnp.maximum(jnp.sum(p), 1e-12)
-    w = (n_live.astype(jnp.float32) * jnp.take(probs, idx)) ** (-beta)
+    z = jnp.maximum(jnp.sum(p), 1e-12)
+    p_sel = gather_rows(p.reshape(-1, 1), idx)[:, 0]
+    w = (n_live.astype(jnp.float32) * (p_sel / z)) ** (-beta)
     w = w / jnp.maximum(jnp.max(w), 1e-12)
     return batch, idx, w
 

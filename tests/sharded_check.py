@@ -103,11 +103,9 @@ def run_check():
         rtol=1e-3, atol=1e-5)
 
     # prioritized + dp placements compile and produce finite losses,
-    # now THROUGH the shard_map kernels (PER's score kernel + scatter;
-    # dp shards ring rows over BOTH mesh axes, exercising the
-    # tuple-axis psum_scatter). PER index selection stays discontinuous
-    # in float noise, so no cross-layout equality claim — see
-    # tests/test_sharded_megastep.py.
+    # now THROUGH the shard_map kernels (PER's fused group-local
+    # top-k select + scatter; dp shards ring rows over BOTH mesh axes,
+    # exercising the tuple-axis psum_scatter and candidate all_gather).
     rops.reset_trace_counts()
     for kw in ({"prioritized": True, "use_pallas": True},
                {"placement": "dp", "use_pallas": True}):
@@ -116,9 +114,18 @@ def run_check():
         _drive(tr, 1)
         assert np.isfinite(
             np.asarray(tr.last_metrics["critic_loss"])).all(), kw
-    assert rops.TRACE_COUNTS["shard:per_scores"] > 0, rops.TRACE_COUNTS
+    assert rops.TRACE_COUNTS["shard:per_topk"] > 0, rops.TRACE_COUNTS
     assert rops.TRACE_COUNTS["shard:priority_scatter"] > 0, \
         rops.TRACE_COUNTS
+
+    # PR 4: PER index selection is no longer discontinuous across
+    # layouts — given the same pool state and key, the two-phase
+    # group-local select draws bit-identical batches on every mesh
+    # shape (the full matrix lives in tests/test_per_topk.py; this is
+    # the in-loop smoke of the same guarantee)
+    from test_per_topk import _assert_same_draws, _draws
+    ref = _draws(pallas=False)
+    _assert_same_draws(ref, _draws(mesh_shape=(2, 4)), "shard(2,4)")
     return True
 
 

@@ -17,6 +17,42 @@ def test_type_bytes():
     assert analysis._type_bytes("f32[]") == 4   # scalar = one element
 
 
+def test_collective_result_shapes():
+    """The shape-level collective census benchmarks/roofline.py's PER
+    assertion is built on: kind + result dims per collective, tuple
+    results one entry per array, non-collective ops ignored."""
+    hlo = "\n".join([
+        "  %ag = f32[256]{0} all-gather(f32[64]{0} %x), dims={0}",
+        "  %ar = (f32[8,3]{1,0}, f32[]) all-reduce(...), to_apply=%sum",
+        "  ROOT %rs = f32[16,1]{1,0} reduce-scatter(f32[128,1]{1,0} %y)",
+        # async pair: the tuple-result -start counts once and drops its
+        # FIRST array (the aliased (4096,) operand, which is NOT a
+        # transfer); the -done is skipped entirely
+        "  %ags = (f32[4096]{0}, f32[32]{0}) all-gather-start(...)",
+        "  %agd = f32[32]{0} all-gather-done(%ags)",
+        # nested-tuple start form: still parsed, operand dropped
+        "  %agn = ((f32[2]{0}), (f32[512]{0})) all-gather-start(...)",
+        "  %mm = f32[256,256]{1,0} dot(f32[256,64]{1,0} %a, ...)",
+    ])
+    got = analysis.collective_result_shapes(hlo)
+    assert ("all-gather", (256,)) in got
+    assert ("all-reduce", (8, 3)) in got
+    assert ("all-reduce", ()) in got
+    assert ("reduce-scatter", (16, 1)) in got  # ROOT-prefixed line
+    assert ("all-gather", (32,)) in got        # async start, dest only
+    assert ("all-gather", (512,)) in got       # nested-tuple start
+    assert ("all-gather", (4096,)) not in got
+    assert ("all-gather", (2,)) not in got
+    assert all(kind != "dot" for kind, _ in got)
+    assert len(got) == 6
+    # the bytes census applies the same async-pair rule: each start
+    # costs its destination once, never operand + done result
+    b = analysis.collective_bytes(hlo)
+    assert b["all-gather"] == (256 + 32 + 512) * 4
+    assert b["reduce-scatter"] == 16 * 4
+    assert b["count"] == 5
+
+
 def test_extrapolate_linear():
     c1 = {"flops": 10.0, "bytes": 100.0, "coll": 1.0,
           "coll_breakdown": {"all-gather": 1.0}}
