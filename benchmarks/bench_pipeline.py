@@ -34,7 +34,28 @@ against their oracles). Partitionable bit generation costs ~15-20% more
 host-CPU time than the legacy impl on this dispatch-bound probe (tiny
 nets make RNG a visible fraction; on TPU with production nets it is
 noise), so absolute Hz across that boundary aren't comparable — the
-fused/unfused RATIO is the stable signal and is unchanged (~3.3x).
+fused/unfused RATIO is the stable signal. PR 5 cleaned two more
+comparability seams: the probe arms now disable eval outright
+(``eval_every_rounds=0``; the old ``10**9`` sentinel still fired one
+round-0 eval inside every timed window) and the Hz columns divide
+post-warmup frames by post-warmup wall time (the old quotient counted
+warmup frames it didn't count the seconds for).
+
+``--mode eval-overlap`` records the paper's Fig. 4b claim — eval and
+visualization run fully asynchronously with training — as the
+``eval_overlap`` entry of ``BENCH_pipeline.json`` (read-modify-write:
+the fused/unfused/sharded entries are left untouched). Three arms on
+the same dispatch-bound probe with one eval (4 episodes) gated per
+fused dispatch: ``eval_off`` (no eval at all, the ceiling),
+``async_eval`` (the host runtime: the train thread publishes the
+``overlap_eval`` snapshot into the latest-wins mailbox and keeps
+dispatching), and ``inline`` (the pre-runtime behavior: the loop blocks
+on ``float(eval_batch(...))`` every window). Each arm reports
+``rounds_per_s``, the cumulative train-thread ``eval_blocked_s``, and
+``blocked_frac`` (blocked seconds / wall). The claim under test:
+async blocked_frac ~ 0 and async rounds/s within noise of eval_off,
+while inline shows the gap. ``evals`` / ``eval_dropped`` count how many
+snapshots were scored vs replaced in the mailbox (latest-wins).
 
 ``--mode queue`` records the paper's Fig. 4a shared-memory-vs-queue gap
 as its own regression surface (``BENCH_queue.json``): the same probe on
@@ -76,7 +97,7 @@ def run_arm(fused: bool, seconds: float, rpd: int, repeats: int,
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=1, batch_size=32,
         chunk_len=1, updates_per_round=1, warmup_frames=64,
-        replay_capacity=4096, eval_every_rounds=10**9,
+        replay_capacity=4096, eval_every_rounds=0,
         rounds_per_dispatch=rpd, fused=fused, mesh=mesh,
         hp=AlgoHP(algo="sac", hidden=(32, 32)))
     tr = SpreezeTrainer(cfg)
@@ -115,7 +136,7 @@ def run_transfer_arm(transfer: str, seconds: float, repeats: int,
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=4, batch_size=32,
         chunk_len=8, updates_per_round=1, warmup_frames=64,
-        replay_capacity=4096, eval_every_rounds=10**9,
+        replay_capacity=4096, eval_every_rounds=0,
         transfer=transfer, queue_size=queue_size, fused=False,
         hp=AlgoHP(algo="sac", hidden=(32, 32)))
     tr = SpreezeTrainer(cfg)
@@ -142,6 +163,70 @@ def run_transfer_arm(transfer: str, seconds: float, repeats: int,
                 hist.transfer_stats.get("transmission_loss", 0.0), 4),
             "blocked_time_s": round(
                 hist.transfer_stats.get("blocked_time_s", 0.0), 4)}
+
+
+def run_eval_overlap_arm(eval_mode: str, seconds: float, rpd: int,
+                         repeats: int) -> dict:
+    """One probe arm for the Fig. 4b surface. ``eval_mode``: "off" (no
+    eval windows), "async" (host runtime + overlap_eval snapshots), or
+    "inline" (the blocking pre-runtime path)."""
+    assert eval_mode in ("off", "async", "inline")
+    cfg = SpreezeConfig(
+        env_name="pendulum", algo="sac", num_envs=1, batch_size=32,
+        chunk_len=1, updates_per_round=1, warmup_frames=64,
+        replay_capacity=4096, rounds_per_dispatch=rpd, fused=True,
+        eval_every_rounds=(rpd if eval_mode != "off" else 0),
+        eval_episodes=4, async_eval=(eval_mode == "async"),
+        overlap_eval=(eval_mode == "async"),
+        hp=AlgoHP(algo="sac", hidden=(32, 32)))
+    tr = SpreezeTrainer(cfg)
+    tr.train(max_seconds=0.01)
+    runs = []
+    for _ in range(repeats):
+        tr.total_frames = 0
+        tr.total_updates = 0
+        runs.append(tr.train(max_seconds=seconds))
+    hist = sorted(runs, key=lambda h: h.update_hz)[len(runs) // 2]
+    return {"eval_mode": eval_mode,
+            "rounds_per_s": round(hist.update_hz / cfg.updates_per_round, 1),
+            "sampling_hz": round(hist.sampling_hz, 1),
+            "eval_blocked_s": round(hist.eval_blocked_s, 4),
+            "blocked_frac": round(
+                hist.eval_blocked_s / max(hist.wall_s, 1e-9), 4),
+            "evals": len(hist.eval_returns),
+            "eval_dropped": int(hist.runtime_stats.get("eval_dropped", 0))}
+
+
+def main_eval_overlap(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,
+                      out: str = os.path.join(ROOT, "BENCH_pipeline.json")
+                      ) -> dict:
+    """--mode eval-overlap: train-thread blocked time with eval off /
+    async / inline (paper Fig. 4b) -> the ``eval_overlap`` entry of
+    BENCH_pipeline.json (other entries preserved)."""
+    off = run_eval_overlap_arm("off", seconds, rpd, repeats)
+    async_arm = run_eval_overlap_arm("async", seconds, rpd, repeats)
+    inline = run_eval_overlap_arm("inline", seconds, rpd, repeats)
+    entry = {"seconds_per_arm": seconds, "eval_episodes": 4,
+             "eval_every_rounds": rpd,
+             "eval_off": off, "async_eval": async_arm, "inline": inline,
+             "async_over_off_rounds_per_s": round(
+                 async_arm["rounds_per_s"] / max(off["rounds_per_s"], 1e-9),
+                 3),
+             "inline_over_off_rounds_per_s": round(
+                 inline["rounds_per_s"] / max(off["rounds_per_s"], 1e-9),
+                 3)}
+    for name, arm in (("eval_off", off), ("async_eval", async_arm),
+                      ("inline", inline)):
+        emit("eval_overlap", name, **arm)
+    report = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            report = json.load(f)
+    report["eval_overlap"] = entry
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return report
 
 
 def main_queue(seconds: float = 2.0, repeats: int = 3,
@@ -221,6 +306,12 @@ def main(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,
     report = {"env": "pendulum", "algo": "sac", "seconds_per_arm": seconds,
               "unfused": unfused, "fused": fused,
               "fused_over_unfused_rounds_per_s": round(speedup, 3)}
+    if os.path.exists(out):
+        # keep the eval_overlap entry (owned by --mode eval-overlap)
+        with open(out) as f:
+            prior = json.load(f)
+        if "eval_overlap" in prior:
+            report["eval_overlap"] = prior["eval_overlap"]
     if sharded:
         comp = run_sharded_comparison(seconds, rpd, repeats)
         report["sharded_comparison"] = comp
@@ -245,9 +336,12 @@ if __name__ == "__main__":
                     help="timed repeats per arm (median reported)")
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the 8-device sharded-vs-replicated child")
-    ap.add_argument("--mode", choices=("shared", "queue"), default="shared",
+    ap.add_argument("--mode", choices=("shared", "queue", "eval-overlap"),
+                    default="shared",
                     help="shared: fused-vs-eager (BENCH_pipeline.json); "
-                         "queue: host-queue baseline (BENCH_queue.json)")
+                         "queue: host-queue baseline (BENCH_queue.json); "
+                         "eval-overlap: async-vs-inline eval blocked time "
+                         "(eval_overlap entry of BENCH_pipeline.json)")
     ap.add_argument("--sharded-child", default=None, metavar="OUT",
                     help=argparse.SUPPRESS)   # internal child-process mode
     args = ap.parse_args()
@@ -256,6 +350,9 @@ if __name__ == "__main__":
                       args.sharded_child)
     elif args.mode == "queue":
         main_queue(seconds=args.seconds, repeats=args.repeats)
+    elif args.mode == "eval-overlap":
+        main_eval_overlap(seconds=args.seconds, rpd=args.rpd,
+                          repeats=args.repeats)
     else:
         main(seconds=args.seconds, rpd=args.rpd, repeats=args.repeats,
              sharded=not args.no_sharded)

@@ -34,6 +34,11 @@ def main():
         help="megastep emits a donated actor snapshot that eval/viz "
              "consume without blocking the next dispatch")
     ap.add_argument(
+        "--inline-eval", action="store_true",
+        help="run eval/viz inline on the train thread (the pre-runtime "
+             "behavior) instead of on the async host runtime's "
+             "background workers")
+    ap.add_argument(
         "--pallas", action="store_true",
         help="run the replay ring through the blocked Pallas kernels "
              "(Mosaic on TPU, interpreter elsewhere); with --mesh they "
@@ -77,6 +82,7 @@ def main():
         overlap_eval=args.overlap_eval,
         use_pallas=args.pallas,
         weight_sync="ssd",          # eval reads .npz snapshots (paper §3.3.1)
+        async_eval=(False if args.inline_eval else None),
         eval_every_rounds=25)
     trainer = SpreezeTrainer(cfg)
     print("== training ==")

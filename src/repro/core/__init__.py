@@ -1,9 +1,12 @@
-"""Spreeze core: async pipeline, AC model parallelism, adaptation, transfer."""
+"""Spreeze core: async pipeline + host runtime, AC model parallelism,
+adaptation, transfer."""
 from repro.core.adaptation import (auto_tune, tune_batch_size, tune_num_envs,
                                    tune_rounds_per_dispatch)
 from repro.core.pipeline import SpreezeConfig, SpreezeTrainer, TrainHistory
+from repro.core.runtime import HostRuntime, Snapshot, SnapshotMailbox
 from repro.core.transfer import QueueTransfer, SharedTransfer, make_transfer
 
 __all__ = ["SpreezeConfig", "SpreezeTrainer", "TrainHistory", "auto_tune",
            "tune_batch_size", "tune_num_envs", "tune_rounds_per_dispatch",
-           "QueueTransfer", "SharedTransfer", "make_transfer"]
+           "QueueTransfer", "SharedTransfer", "make_transfer",
+           "HostRuntime", "Snapshot", "SnapshotMailbox"]

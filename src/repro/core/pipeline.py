@@ -34,6 +34,23 @@ path is only available on the shared-memory transfer in async mode; the
 the Fig. 4a ablation (and the dispatch-overhead comparison in
 ``benchmarks/bench_pipeline.py``) measure exactly what they did before.
 
+**Async host runtime** (``async_eval``, default on): the device side of
+the paper's four-process overlap was handled by async dispatch, but the
+host side was not — the loop used to run ``float(eval_batch(...))``
+inline at every eval window and serialized the ``weight_sync="ssd"``
+save/restore into the train thread. Now the loop only *publishes* an
+actor snapshot (the ``overlap_eval`` donated copy when available, else
+an async device copy) plus the round index into ``core.runtime``'s
+latest-wins mailbox and immediately dispatches the next megastep;
+background workers fold the round index into the dedicated eval/viz
+PRNG streams themselves (publish does zero device dispatch) and run
+the jitted eval/viz on their own dispatch streams, the SSD channel's atomic save+restore happens once
+per snapshot on its own worker, results land in ``TrainHistory`` in
+round order, and solved-early detection arrives through an event the
+loop polls. ``sync_mode`` (and ``async_eval=False``) keep the inline
+path for the Fig. 4a ablation; ``bench_pipeline --mode eval-overlap``
+records the blocked-time gap (Fig. 4b).
+
 **Sharded megastep** (``mesh``/``placement``): with an ("ac", "batch")
 jax Mesh the megastep compiles under in/out shardings from
 ``core.model_parallel`` — the double-Q ensemble axis on ``ac`` (paper
@@ -47,9 +64,11 @@ without pinning the training state the next dispatch donates.
 """
 from __future__ import annotations
 
+import bisect
 import functools
 import os
 import tempfile
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -59,6 +78,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import model_parallel as mp
+from repro.core import runtime as rt
 from repro.core.transfer import make_transfer
 from repro.distributed.sharding import trainer_rules, use_rules
 from repro.kernels import ops as kops
@@ -107,10 +127,17 @@ class SpreezeConfig:
     # consume weights without pinning the donated training state
     overlap_eval: bool = False
     # eval/vis "processes"
-    eval_every_rounds: int = 50
+    eval_every_rounds: int = 50   # 0 = off
     eval_episodes: int = 4
     viz_every_rounds: int = 0     # 0 = off; paper's visualization process
     viz_dir: Optional[str] = None  # .npz trajectories land here
+    # host-side async runtime (core.runtime): eval/viz/SSD run on worker
+    # threads fed by a latest-wins snapshot mailbox, so the train thread
+    # never blocks on them. None = auto (async unless sync_mode — the
+    # Fig. 4a ablation keeps the inline path).
+    async_eval: Optional[bool] = None
+    eval_workers: int = 1
+    viz_workers: int = 1
     seed: int = 0
     hp: AlgoHP = field(default_factory=AlgoHP)
 
@@ -121,22 +148,44 @@ class SpreezeConfig:
 
 @dataclass
 class TrainHistory:
-    """Metrics the paper reports (Tables 2/3, Fig. 5)."""
+    """Metrics the paper reports (Tables 2/3, Fig. 5).
+
+    Recording is thread-safe and **round-ordered**: the async runtime's
+    eval workers may complete out of publish order, but entries are
+    inserted by ``round_i`` so async and inline runs produce the same
+    deterministic ordering. The Hz headline metrics count post-warmup
+    frames over post-warmup wall time (warmup frames are reported
+    separately in ``warmup_frames`` — dividing warmup-inclusive frame
+    counts by the post-warmup clock inflated the Table-2 numbers).
+    """
     times: List[float] = field(default_factory=list)
     eval_returns: List[float] = field(default_factory=list)
     env_frames: List[int] = field(default_factory=list)
     update_steps: List[int] = field(default_factory=list)
+    eval_rounds: List[int] = field(default_factory=list)
     sampling_hz: float = 0.0
     update_hz: float = 0.0            # update frequency (steps/s)
     update_frame_hz: float = 0.0      # update frame rate (steps/s * batch)
     transfer_stats: Dict[str, float] = field(default_factory=dict)
     solved_time: Optional[float] = None
+    wall_s: float = 0.0               # timed window (post-warmup wall time)
+    warmup_frames: int = 0            # frames sampled during this warmup
+    eval_blocked_s: float = 0.0       # train-thread time lost to eval/viz
+    runtime_stats: Dict[str, float] = field(default_factory=dict)
+    _lock: Any = field(default_factory=threading.Lock, repr=False,
+                       compare=False)
 
-    def record_eval(self, t, ret, frames, steps):
-        self.times.append(t)
-        self.eval_returns.append(ret)
-        self.env_frames.append(frames)
-        self.update_steps.append(steps)
+    def record_eval(self, t, ret, frames, steps, round_i=None):
+        with self._lock:
+            if round_i is None:
+                round_i = (self.eval_rounds[-1] + 1 if self.eval_rounds
+                           else 0)
+            i = bisect.bisect_right(self.eval_rounds, round_i)
+            self.eval_rounds.insert(i, round_i)
+            self.times.insert(i, t)
+            self.eval_returns.insert(i, ret)
+            self.env_frames.insert(i, frames)
+            self.update_steps.insert(i, steps)
 
 
 def _window_hits(round_i: int, window: int, every: int) -> bool:
@@ -196,6 +245,15 @@ class SpreezeTrainer:
             raise ValueError("overlap_eval snapshots are emitted by the "
                              "fused megastep; the eager loop's live "
                              "weights already overlap")
+        if cfg.async_eval and cfg.sync_mode:
+            raise ValueError("async_eval runs eval/viz on background "
+                             "workers; sync_mode is the Fig. 4a inline "
+                             "ablation — pick one")
+        if cfg.eval_workers < 1 or cfg.viz_workers < 1:
+            raise ValueError("eval_workers / viz_workers must be >= 1")
+        # auto: async host runtime unless the sync ablation asked to block
+        self.use_async_eval = ((not cfg.sync_mode) if cfg.async_eval is None
+                               else bool(cfg.async_eval))
 
         self._build_compiled()
         if cfg.mesh is not None:
@@ -445,22 +503,47 @@ class SpreezeTrainer:
     # ------------------------------------------------------------------ #
     # weight sync to the eval/vis "processes"
     # ------------------------------------------------------------------ #
-    def _actor_for_eval(self):
-        # overlap_eval: the megastep emitted a private actor copy; eval
-        # consumes it while the next dispatch donates the live state
-        actor = self.state.actor
+    def _snapshot_actor(self):
+        """An actor pytree the eval/viz workers can own: the megastep's
+        ``overlap_eval`` donated copy when available, else a fresh
+        async-dispatched device copy — either way the next dispatch can
+        donate the live training state without pinning it under eval."""
         if (self.cfg.overlap_eval and self.last_metrics is not None
                 and "actor_snapshot" in self.last_metrics):
-            actor = self.last_metrics["actor_snapshot"]
-        if self.cfg.weight_sync == "live":
-            return actor                               # zero-copy
-        # SSD path: write-then-read .npz (atomic, as the paper requires)
+            return self.last_metrics["actor_snapshot"]
+        return jax.tree.map(jnp.copy, self.state.actor)
+
+    def _ssd_materialize(self, actor):
+        """The paper's SSD weight channel: atomic write-then-rename
+        ``.npz``, then read back — consumers never see a torn file."""
         path = getattr(self, "_ssd_path", None)
         if path is None:
             d = tempfile.mkdtemp(prefix="spreeze_ssd_")
             path = self._ssd_path = os.path.join(d, "actor.npz")
         checkpoint.save(path, actor)
         actor, _ = checkpoint.restore(path, actor)
+        return actor
+
+    def _actor_for_eval(self, round_i: Optional[int] = None):
+        # inline (sync_mode / async_eval=False) weight sync. overlap_eval:
+        # the megastep emitted a private actor copy; eval consumes it
+        # while the next dispatch donates the live state
+        actor = self.state.actor
+        if (self.cfg.overlap_eval and self.last_metrics is not None
+                and "actor_snapshot" in self.last_metrics):
+            actor = self.last_metrics["actor_snapshot"]
+        if self.cfg.weight_sync == "live":
+            return actor                               # zero-copy
+        # SSD path, cached per round: viz and eval landing on the same
+        # round share ONE save/restore instead of serializing two full
+        # round-trips into the train loop
+        cache = getattr(self, "_ssd_cache", None)
+        if round_i is not None and cache is not None and \
+                cache[0] == round_i:
+            return cache[1]
+        actor = self._ssd_materialize(actor)
+        if round_i is not None:
+            self._ssd_cache = (round_i, actor)
         return actor
 
     # ------------------------------------------------------------------ #
@@ -494,77 +577,155 @@ class SpreezeTrainer:
                                              self._env_sharding)
         jax.block_until_ready(jax.tree.leaves(self.replay))
 
+    def _viz_dump(self, actor, key, round_i: int) -> None:
+        """Run the jitted viz rollout and drop the trajectory to .npz —
+        the paper's visualization process, shared by the inline path and
+        the async runtime's viz workers."""
+        obs, act_tr, rew = self._viz(actor, key)
+        if self.cfg.viz_dir:
+            import numpy as np
+            os.makedirs(self.cfg.viz_dir, exist_ok=True)
+            np.savez(os.path.join(self.cfg.viz_dir,
+                                  f"traj_{round_i:06d}.npz"),
+                     obs=np.asarray(obs), act=np.asarray(act_tr),
+                     rew=np.asarray(rew))
+
+    def _make_runtime(self, hist, target_return, log_cb):
+        """The host async runtime for one ``train()`` call: eval/viz/SSD
+        workers behind latest-wins mailboxes (core.runtime)."""
+        cfg = self.cfg
+        # workers fold the dedicated eval/viz streams by round index
+        # themselves: publishing must stay free of device dispatch (two
+        # eager fold_ins on the train thread cost more than the lock)
+        return rt.HostRuntime(
+            eval_fn=lambda actor, round_i: float(self._eval(
+                actor, jax.random.fold_in(self._eval_key, round_i))),
+            viz_fn=((lambda actor, round_key, round_i: self._viz_dump(
+                actor, jax.random.fold_in(self._viz_key, round_key),
+                round_i)) if cfg.viz_every_rounds else None),
+            hist=hist,
+            materialize_fn=(self._ssd_materialize
+                            if cfg.weight_sync == "ssd" else None),
+            eval_workers=cfg.eval_workers, viz_workers=cfg.viz_workers,
+            target_return=target_return, log_cb=log_cb)
+
     def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
               target_return: Optional[float] = None,
               log_cb: Optional[Callable] = None) -> TrainHistory:
         cfg = self.cfg
         hist = TrainHistory()
         frames_per_chunk = cfg.num_envs * cfg.chunk_len
+        pre_warmup = self.total_frames
         self._warmup()
+        # warmup frames counted separately: the Hz headline metrics are
+        # post-warmup frames over post-warmup wall time (dividing the
+        # warmup-inclusive total by the post-warmup clock inflated them)
+        hist.warmup_frames = self.total_frames - pre_warmup
+        frames0, updates0 = self.total_frames, self.total_updates
+        # round counters restart every train() call: a same-numbered
+        # round from a previous run must not serve its cached SSD actor
+        self._ssd_cache = None
         # fused: round counter advances R per dispatch; gating generalizes
         window = cfg.rounds_per_dispatch if self.use_fused else 1
+        runtime = None
+        if self.use_async_eval and (cfg.eval_every_rounds
+                                    or cfg.viz_every_rounds):
+            runtime = self._make_runtime(hist, target_return, log_cb)
 
         t0 = time.perf_counter()
         round_i = 0
         solved_at = None
-        while True:
-            now = time.perf_counter() - t0
-            if now >= max_seconds or self.total_frames >= max_frames:
-                break
-            if self.use_fused:
-                # --- one device-resident megastep = R whole rounds --------
-                (self.state, self.replay, self.env_states, self.key,
-                 self.last_metrics) = self._megastep(
-                    self.state, self.replay, self.env_states, self.key)
-                self.total_frames += frames_per_chunk * window
-                self.total_updates += cfg.updates_per_round * window
-            else:
-                # --- sampler "process": dispatch, don't block -------------
-                self.env_states, exp, self.key, _ = self._sampler(
-                    self.state.actor, self.env_states, self.key)
-                self.replay = self.transfer.push(self.replay, exp)
-                self.total_frames += frames_per_chunk
-                if cfg.sync_mode:
-                    jax.block_until_ready(exp)  # Fig. 4a: wait at handoff
-                # --- updater "process" ------------------------------------
-                self.replay = self.transfer.flush(self.replay)
-                self.state, self.replay, self.key, closs = \
-                    self._update_round(self.state, self.replay, self.key)
-                self.total_updates += cfg.updates_per_round
-                if cfg.sync_mode:
-                    jax.block_until_ready(closs)
-            # --- visualization "process" -----------------------------------
-            if _window_hits(round_i, window, cfg.viz_every_rounds):
-                obs, act_tr, rew = self._viz(
-                    self._actor_for_eval(),
-                    jax.random.fold_in(self._viz_key, round_i))
-                if cfg.viz_dir:
-                    import numpy as np
-                    os.makedirs(cfg.viz_dir, exist_ok=True)
-                    np.savez(os.path.join(cfg.viz_dir,
-                                          f"traj_{round_i:06d}.npz"),
-                             obs=np.asarray(obs), act=np.asarray(act_tr),
-                             rew=np.asarray(rew))
-            # --- eval "process" -------------------------------------------
-            if _window_hits(round_i, window, cfg.eval_every_rounds):
-                ret = float(self._eval(
-                    self._actor_for_eval(),
-                    jax.random.fold_in(self._eval_key, round_i)))
-                t = time.perf_counter() - t0
-                hist.record_eval(t, ret, self.total_frames,
-                                 self.total_updates)
-                if log_cb:
-                    log_cb(t, ret, self.total_frames, self.total_updates)
-                if (target_return is not None and ret >= target_return
-                        and solved_at is None):
-                    solved_at = t
+        try:
+            while True:
+                now = time.perf_counter() - t0
+                if now >= max_seconds or self.total_frames >= max_frames:
                     break
-            round_i += window
+                if runtime is not None and runtime.solved.is_set():
+                    solved_at = runtime.solved_time
+                    break
+                if self.use_fused:
+                    # --- one device-resident megastep = R whole rounds ----
+                    (self.state, self.replay, self.env_states, self.key,
+                     self.last_metrics) = self._megastep(
+                        self.state, self.replay, self.env_states, self.key)
+                    self.total_frames += frames_per_chunk * window
+                    self.total_updates += cfg.updates_per_round * window
+                else:
+                    # --- sampler "process": dispatch, don't block ---------
+                    self.env_states, exp, self.key, _ = self._sampler(
+                        self.state.actor, self.env_states, self.key)
+                    self.replay = self.transfer.push(self.replay, exp)
+                    self.total_frames += frames_per_chunk
+                    if cfg.sync_mode:
+                        jax.block_until_ready(exp)  # Fig. 4a: handoff wait
+                    # --- updater "process" --------------------------------
+                    self.replay = self.transfer.flush(self.replay)
+                    self.state, self.replay, self.key, closs = \
+                        self._update_round(self.state, self.replay, self.key)
+                    self.total_updates += cfg.updates_per_round
+                    if cfg.sync_mode:
+                        jax.block_until_ready(closs)
+                # --- eval / viz "processes" -------------------------------
+                want_viz = _window_hits(round_i, window,
+                                        cfg.viz_every_rounds)
+                want_eval = _window_hits(round_i, window,
+                                         cfg.eval_every_rounds)
+                if want_viz or want_eval:
+                    tb = time.perf_counter()
+                    if runtime is not None:
+                        # async: publish the snapshot, keep dispatching —
+                        # the workers consume it on their own streams
+                        # (eval_key carries the round index; the workers
+                        # fold the PRNG streams off-thread)
+                        runtime.publish(rt.Snapshot(
+                            round_i=round_i, actor=self._snapshot_actor(),
+                            eval_key=round_i, viz_key=round_i,
+                            t=tb - t0, frames=self.total_frames,
+                            steps=self.total_updates, want_eval=want_eval,
+                            want_viz=want_viz))
+                    else:
+                        # inline (sync ablation): block the train thread
+                        if want_viz:
+                            self._viz_dump(
+                                self._actor_for_eval(round_i),
+                                jax.random.fold_in(self._viz_key, round_i),
+                                round_i)
+                        if want_eval:
+                            ret = float(self._eval(
+                                self._actor_for_eval(round_i),
+                                jax.random.fold_in(self._eval_key,
+                                                   round_i)))
+                            t = time.perf_counter() - t0
+                            hist.record_eval(t, ret, self.total_frames,
+                                             self.total_updates,
+                                             round_i=round_i)
+                            if log_cb:
+                                log_cb(t, ret, self.total_frames,
+                                       self.total_updates)
+                            if (target_return is not None
+                                    and ret >= target_return
+                                    and solved_at is None):
+                                solved_at = t
+                                hist.eval_blocked_s += (
+                                    time.perf_counter() - tb)
+                                break
+                    hist.eval_blocked_s += time.perf_counter() - tb
+                round_i += window
 
-        jax.block_until_ready(self.state.step)
-        wall = time.perf_counter() - t0
-        hist.sampling_hz = self.total_frames / wall
-        hist.update_hz = self.total_updates / wall
+            jax.block_until_ready(self.state.step)
+            wall = time.perf_counter() - t0
+        finally:
+            if runtime is not None:
+                # graceful drain OUTSIDE the timed window: the last
+                # published snapshot is always scored before we return
+                runtime.close()
+        if runtime is not None:
+            if solved_at is None and runtime.solved.is_set():
+                solved_at = runtime.solved_time
+            hist.runtime_stats = runtime.stats()
+        hist.wall_s = wall
+        hist.sampling_hz = (self.total_frames - frames0) / wall
+        hist.update_hz = (self.total_updates - updates0) / wall
         hist.update_frame_hz = hist.update_hz * cfg.batch_size
         hist.transfer_stats = self.transfer.stats()
         hist.solved_time = solved_at

@@ -1,0 +1,296 @@
+"""Host-side async runtime: background eval / viz / SSD-checkpoint workers.
+
+Paper (§3.1, Fig. 4b): sampling, network update, *test, and visualization*
+are separate processes that never block each other. The device side of
+that claim has been true since the fused megastep (async dispatch
+overlaps sampler and updater compute), but the host side was not: the
+train loop ran ``float(eval_batch(...))`` inline at every eval window,
+and the ``weight_sync="ssd"`` channel serialized a synchronous
+save/restore into the loop — exactly the handoff stall the paper
+ablates away (Fig. 4a vs 4b).
+
+This module is the host half of the fix. The train thread only
+*publishes* an actor snapshot (plus the round index, per-consumer key
+material, and frame/step counters) into a **latest-wins mailbox** and
+immediately dispatches the next megastep; worker threads consume
+snapshots and run the jitted ``eval_batch`` / ``viz_episode`` on their
+own dispatch streams. Results land in the thread-safe ``TrainHistory``
+in **round order** (workers may finish out of order; recording inserts
+by round index), solved-early detection is signalled through an
+``Event`` the train loop polls, and ``close()`` drains every pending
+snapshot before joining so the last published weights are always
+scored.
+
+Latest-wins semantics: a mailbox holds at most ONE pending snapshot. If
+the workers fall behind the publish cadence, newer snapshots replace
+older unconsumed ones (counted in ``stats()["..._dropped"]``) — the
+paper's processes poll the newest SSD weights in exactly the same way.
+The snapshot a worker has already claimed is never revoked, and the
+final snapshot is always processed on drain.
+
+The SSD weight channel (``materialize_fn``): when the trainer syncs
+weights through ``.npz`` files, a dedicated channel worker performs the
+atomic save + restore **once per snapshot** off-thread and forwards the
+same materialized actor to both the eval and viz mailboxes — the train
+thread never touches the filesystem, and eval/viz never re-serialize a
+snapshot the channel already wrote.
+
+The runtime is deliberately JAX-free: ``eval_fn(actor, key) -> float``
+and ``viz_fn(actor, key, round_i)`` are opaque callables, so the same
+machinery drives compiled device functions and plain-Python test
+doubles. Worker exceptions are captured and re-raised in the train
+thread from ``drain()`` / ``close()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+
+@dataclass
+class Snapshot:
+    """One published weight snapshot plus everything its consumers need.
+
+    ``actor`` must be safe for the workers to own: either the
+    megastep's ``overlap_eval`` donated copy or an explicit
+    ``jnp.copy`` made before the next dispatch donates the live state.
+    ``eval_key``/``viz_key`` are opaque key *material* passed through to
+    the consumer callables — the trainer publishes the round index and
+    lets the workers fold it into their dedicated PRNG streams, so
+    publishing performs no device dispatch. ``t`` is the train-clock
+    publish time — the instant the weights existed — so async and
+    inline runs report comparable solve times.
+    """
+    round_i: int
+    actor: Any
+    eval_key: Any = None
+    viz_key: Any = None
+    t: float = 0.0
+    frames: int = 0
+    steps: int = 0
+    want_eval: bool = True
+    want_viz: bool = False
+
+
+class SnapshotMailbox:
+    """Single-slot, latest-wins mailbox shared through one Condition.
+
+    ``publish`` replaces any unconsumed item (the replaced one counts as
+    dropped); ``_pop_locked`` hands the slot to a worker atomically with
+    the runtime's active-task counter, so a drain can never observe an
+    "empty" runtime while a claimed snapshot is still being processed.
+    """
+
+    def __init__(self, cond: threading.Condition, name: str = "mailbox"):
+        self._cond = cond
+        self.name = name
+        self._item: Optional[Snapshot] = None
+        self.published = 0
+        self.dropped = 0
+
+    def publish(self, item: Snapshot) -> None:
+        with self._cond:
+            self._publish_locked(item)
+
+    def _publish_locked(self, item: Snapshot) -> None:
+        if self._item is not None:
+            self.dropped += 1
+        self._item = item
+        self.published += 1
+        self._cond.notify_all()
+
+    def _pop_locked(self) -> Optional[Snapshot]:
+        item, self._item = self._item, None
+        return item
+
+    @property
+    def empty(self) -> bool:
+        return self._item is None
+
+
+class HostRuntime:
+    """Background eval/viz/SSD workers behind latest-wins mailboxes.
+
+    Parameters
+    ----------
+    eval_fn : (actor, key) -> float — blocking eval of one snapshot.
+    viz_fn : (actor, key, round_i) -> None — records one trajectory.
+    hist : TrainHistory (or duck-type with ``record_eval``) receiving
+        results; recording is round-ordered and thread-safe.
+    materialize_fn : optional (actor) -> actor. The SSD weight channel:
+        runs once per snapshot in its own worker (atomic ``.npz``
+        save + restore) before the result fans out to eval and viz.
+    eval_workers / viz_workers : thread counts per consumer. More than
+        one worker only helps when a single eval is slower than the
+        publish cadence; results stay round-ordered regardless.
+    target_return : solved threshold — an eval result >= this sets
+        ``solved`` (an Event the train loop polls) and ``solved_time``
+        (the *publish* time of the solving snapshot).
+    log_cb : optional (t, ret, frames, steps) callback per eval result.
+    """
+
+    def __init__(self, *, eval_fn: Callable[[Any, Any], float],
+                 viz_fn: Optional[Callable[[Any, Any, int], None]] = None,
+                 hist=None,
+                 materialize_fn: Optional[Callable[[Any], Any]] = None,
+                 eval_workers: int = 1, viz_workers: int = 1,
+                 target_return: Optional[float] = None,
+                 log_cb: Optional[Callable] = None):
+        if eval_workers < 1 or viz_workers < 1:
+            raise ValueError("worker counts must be >= 1")
+        self._eval_fn = eval_fn
+        self._viz_fn = viz_fn
+        self._hist = hist
+        self._materialize_fn = materialize_fn
+        self._target = target_return
+        self._log_cb = log_cb
+
+        self._cond = threading.Condition()
+        self._active = 0                 # snapshots claimed, still running
+        self._closed = False
+        self._errors: List[BaseException] = []
+        self.solved = threading.Event()
+        self.solved_time: Optional[float] = None
+        self.eval_done = 0
+        self.viz_done = 0
+
+        self._eval_box = SnapshotMailbox(self._cond, "eval")
+        self._viz_box = SnapshotMailbox(self._cond, "viz")
+        self._boxes = [self._eval_box, self._viz_box]
+        self._threads: List[threading.Thread] = []
+        if materialize_fn is not None:
+            # the SSD channel sits between publish and the consumers
+            self._ssd_box = SnapshotMailbox(self._cond, "ssd")
+            self._boxes.append(self._ssd_box)
+            self._spawn("ssd-channel", self._ssd_box, self._handle_ssd)
+        else:
+            self._ssd_box = None
+        for i in range(eval_workers):
+            self._spawn(f"eval-{i}", self._eval_box, self._handle_eval)
+        if viz_fn is not None:
+            for i in range(viz_workers):
+                self._spawn(f"viz-{i}", self._viz_box, self._handle_viz)
+
+    # ------------------------------------------------------------------ #
+    # train-thread API
+    # ------------------------------------------------------------------ #
+    def publish(self, snap: Snapshot) -> None:
+        """Non-blocking: route a snapshot to its consumers (via the SSD
+        channel when one is configured) and return immediately."""
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("publish() on a closed HostRuntime")
+            if self._ssd_box is not None:
+                self._ssd_box._publish_locked(snap)
+            else:
+                self._route_locked(snap)
+
+    def drain(self, timeout: Optional[float] = 60.0) -> None:
+        """Block until every published snapshot is consumed or dropped,
+        then re-raise the first worker error (if any) in this thread."""
+        with self._cond:
+            ok = self._cond.wait_for(self._drained_locked, timeout)
+        if not ok:
+            raise TimeoutError(f"HostRuntime.drain timed out after "
+                               f"{timeout}s")
+        self._reraise()
+
+    def close(self, timeout: Optional[float] = 60.0) -> None:
+        """Graceful shutdown: drain pending snapshots, join workers,
+        surface worker errors. Idempotent."""
+        err: Optional[BaseException] = None
+        try:
+            self.drain(timeout)
+        except BaseException as e:      # still join threads on error
+            err = e
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout)
+        if err is not None:             # the FIRST failure is the story;
+            raise err                   # later ones stay queued behind it
+        self._reraise()
+
+    def stats(self) -> dict:
+        with self._cond:
+            s = {"published": (self._ssd_box or self._eval_box).published,
+                 "eval_done": self.eval_done, "viz_done": self.viz_done,
+                 "eval_dropped": self._eval_box.dropped,
+                 "viz_dropped": self._viz_box.dropped}
+            if self._ssd_box is not None:
+                s["ssd_dropped"] = self._ssd_box.dropped
+            return s
+
+    # ------------------------------------------------------------------ #
+    # worker internals
+    # ------------------------------------------------------------------ #
+    def _spawn(self, name, box, handler):
+        t = threading.Thread(target=self._worker_loop, args=(box, handler),
+                             name=f"spreeze-{name}", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _route_locked(self, snap: Snapshot) -> None:
+        if snap.want_eval:
+            self._eval_box._publish_locked(snap)
+        if snap.want_viz and self._viz_fn is not None:
+            self._viz_box._publish_locked(snap)
+
+    def _drained_locked(self) -> bool:
+        return (all(b.empty for b in self._boxes) and self._active == 0
+                ) or bool(self._errors)
+
+    def _worker_loop(self, box: SnapshotMailbox, handler):
+        while True:
+            with self._cond:
+                while box.empty and not self._closed:
+                    self._cond.wait(0.2)
+                if box.empty and self._closed:
+                    return
+                item = box._pop_locked()
+                self._active += 1
+            try:
+                handler(item)
+            except BaseException as e:
+                with self._cond:
+                    self._errors.append(e)
+            finally:
+                with self._cond:
+                    self._active -= 1
+                    self._cond.notify_all()
+
+    def _handle_ssd(self, snap: Snapshot) -> None:
+        # one atomic save+restore per snapshot, shared by eval AND viz
+        actor = self._materialize_fn(snap.actor)
+        snap = dataclasses.replace(snap, actor=actor)
+        with self._cond:
+            self._route_locked(snap)
+
+    def _handle_eval(self, snap: Snapshot) -> None:
+        ret = float(self._eval_fn(snap.actor, snap.eval_key))
+        if self._hist is not None:
+            self._hist.record_eval(snap.t, ret, snap.frames, snap.steps,
+                                   round_i=snap.round_i)
+        if self._log_cb is not None:
+            self._log_cb(snap.t, ret, snap.frames, snap.steps)
+        with self._cond:
+            self.eval_done += 1
+            if (self._target is not None and ret >= self._target
+                    and not self.solved.is_set()):
+                self.solved_time = snap.t
+                self.solved.set()
+
+    def _handle_viz(self, snap: Snapshot) -> None:
+        self._viz_fn(snap.actor, snap.viz_key, snap.round_i)
+        with self._cond:
+            self.viz_done += 1
+
+    def _reraise(self) -> None:
+        with self._cond:
+            if not self._errors:
+                return
+            err = self._errors.pop(0)
+        raise RuntimeError("HostRuntime worker failed") from err

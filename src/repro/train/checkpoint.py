@@ -27,14 +27,24 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
     """Atomic save (write-then-rename, so concurrent readers never see a
-    torn file — the property the paper relies on for SSD weight sync)."""
+    torn file — the property the paper relies on for SSD weight sync).
+    A failed write unlinks the temp file instead of leaking it next to
+    the checkpoint (the async SSD channel saves once per eval window —
+    leaked ``.tmp`` files would accumulate for the whole run)."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(tree)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def restore(path: str, like) -> Tuple[Any, Dict[str, Any]]:

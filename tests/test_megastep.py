@@ -100,3 +100,32 @@ def test_window_hits_generalizes_modulo():
     assert _window_hits(8, 4, 10)        # [8, 12) contains 10
     assert not _window_hits(11, 4, 10)   # [11, 15) misses 10 and 20
     assert not _window_hits(1, 4, 0)     # 0 = disabled
+
+
+def test_window_hits_edges():
+    # window wider than `every`: every window holds a multiple -> always
+    for r in range(0, 30):
+        assert _window_hits(r, 8, 3)
+    # round 0 fires for any window x any cadence (even one that will
+    # never fire again inside the run)
+    for w in (1, 4, 16):
+        for e in (1, 7, 10**9):
+            assert _window_hits(0, w, e)
+    # `every` beyond the horizon: only the round-0 window gates
+    assert not _window_hits(4, 4, 10**9)
+    assert not _window_hits(10**9 - 5, 4, 10**9)   # [.., 10**9) exclusive
+    assert _window_hits(10**9 - 3, 4, 10**9)       # window contains 10**9
+
+
+@pytest.mark.parametrize("async_eval", [False, True])
+def test_solved_detection_inside_fused_window(async_eval):
+    """Eval gated inside a fused R-round window must still detect the
+    target and stop the loop early — through the inline break or the
+    async runtime's solved event."""
+    tr = SpreezeTrainer(_cfg(rounds_per_dispatch=4, eval_every_rounds=3,
+                             eval_episodes=1, async_eval=async_eval))
+    hist = tr.train(max_seconds=30.0, target_return=-1e9)
+    assert hist.solved_time is not None
+    assert hist.eval_returns and hist.eval_returns[0] >= -1e9
+    # solved on (at latest) the first scored window -> far under budget
+    assert hist.wall_s < 30.0

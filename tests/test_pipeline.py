@@ -187,6 +187,90 @@ def test_auto_tune_probe_replay_matches_trained_batch():
     assert "disc" in batch
 
 
+def test_throughput_hz_excludes_warmup_frames():
+    """sampling_hz/update_frame_hz used to divide the warmup-INCLUSIVE
+    frame total by the post-warmup wall clock, inflating the Table-2
+    headline metrics. Warmup frames are now counted separately and the
+    Hz are post-warmup frames over post-warmup time."""
+    cfg = SpreezeConfig(env_name="pendulum", num_envs=2, batch_size=32,
+                        chunk_len=4, updates_per_round=1,
+                        warmup_frames=256, replay_capacity=1024,
+                        eval_every_rounds=0)
+    tr = SpreezeTrainer(cfg)
+    hist = tr.train(max_seconds=1.0)
+    assert hist.warmup_frames >= 256
+    post = tr.total_frames - hist.warmup_frames
+    assert hist.sampling_hz * hist.wall_s == pytest.approx(post, rel=1e-6)
+    assert hist.update_hz * hist.wall_s == pytest.approx(
+        tr.total_updates, rel=1e-6)
+    assert hist.update_frame_hz == pytest.approx(
+        hist.update_hz * cfg.batch_size, rel=1e-6)
+    # the buggy warmup-inclusive quantity is strictly larger
+    assert hist.sampling_hz < tr.total_frames / hist.wall_s
+    # a second train() on a warm trainer has no warmup at all
+    hist2 = tr.train(max_seconds=0.2)
+    assert hist2.warmup_frames == 0
+
+
+def test_eval_every_rounds_zero_disables_eval():
+    cfg = SpreezeConfig(env_name="pendulum", num_envs=2, batch_size=32,
+                        chunk_len=4, updates_per_round=1, warmup_frames=32,
+                        replay_capacity=512, eval_every_rounds=0)
+    hist = SpreezeTrainer(cfg).train(max_seconds=0.5)
+    assert hist.eval_returns == [] and hist.eval_blocked_s == 0.0
+
+
+def test_ssd_actor_materialization_cached_per_round(monkeypatch):
+    """Inline weight_sync="ssd": viz and eval landing on the same round
+    share ONE save/restore instead of serializing two (the old path
+    saved+restored twice per shared round)."""
+    from repro.train import checkpoint
+    calls = []
+    orig = checkpoint.save
+
+    def counting_save(path, tree, metadata=None):
+        calls.append(path)
+        return orig(path, tree, metadata)
+
+    monkeypatch.setattr(checkpoint, "save", counting_save)
+    cfg = SpreezeConfig(env_name="pendulum", num_envs=2, batch_size=32,
+                        chunk_len=4, updates_per_round=1, warmup_frames=32,
+                        replay_capacity=512, weight_sync="ssd")
+    tr = SpreezeTrainer(cfg)
+    a1 = tr._actor_for_eval(0)          # viz at round 0: one save
+    a2 = tr._actor_for_eval(0)          # eval at round 0: cache hit
+    assert len(calls) == 1
+    assert a1 is a2
+    tr._actor_for_eval(1)               # next round: fresh save
+    assert len(calls) == 2
+    # train() restarts round numbering, so it must drop the cache: a
+    # same-numbered round afterwards re-materializes the CURRENT
+    # weights instead of serving the previous run's cached actor
+    tr.train(max_seconds=0.05)
+    n = len(calls)
+    tr._actor_for_eval(1)
+    assert len(calls) == n + 1
+
+
+def test_train_history_record_is_thread_safe_and_ordered():
+    import threading
+    from repro.core import TrainHistory
+    hist = TrainHistory()
+    rounds = list(range(0, 64, 2))
+
+    def record(r):
+        hist.record_eval(float(r), -float(r), r * 10, r, round_i=r)
+
+    threads = [threading.Thread(target=record, args=(r,))
+               for r in reversed(rounds)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert hist.eval_rounds == rounds
+    assert hist.eval_returns == [-float(r) for r in rounds]
+
+
 def test_trainer_visualization_process(tmp_path):
     cfg = SpreezeConfig(env_name="pendulum", num_envs=2, batch_size=32,
                         chunk_len=4, updates_per_round=1, warmup_frames=32,

@@ -1,0 +1,213 @@
+"""Host async runtime: latest-wins mailbox semantics, round-ordered
+thread-safe recording, solved-event signaling, SSD channel, error
+propagation, and async-vs-inline trainer equivalence."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SpreezeConfig, SpreezeTrainer, TrainHistory
+from repro.core.runtime import HostRuntime, Snapshot, SnapshotMailbox
+
+
+def _snap(round_i, actor, **kw):
+    base = dict(round_i=round_i, actor=actor, eval_key=round_i,
+                viz_key=round_i, t=float(round_i), frames=round_i * 10,
+                steps=round_i, want_eval=True, want_viz=False)
+    base.update(kw)
+    return Snapshot(**base)
+
+
+def test_mailbox_latest_wins():
+    cond = threading.Condition()
+    box = SnapshotMailbox(cond, "t")
+    box.publish(_snap(0, "a"))
+    box.publish(_snap(1, "b"))       # replaces the unconsumed round 0
+    assert box.published == 2 and box.dropped == 1
+    with cond:
+        item = box._pop_locked()
+    assert item.round_i == 1 and box.empty
+
+
+def test_runtime_matches_inline_and_orders_rounds():
+    """Same snapshots + keys through the runtime and through direct
+    calls -> identical recorded returns, in round order."""
+    hist = TrainHistory()
+
+    def eval_fn(actor, key):
+        return float(actor) * 2.0 + float(key)
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist)
+    snaps = [_snap(i, float(i) + 0.5) for i in range(0, 10, 2)]
+    for s in snaps:
+        r.publish(s)
+        r.drain()                    # no latest-wins drops: score each one
+    r.close()
+    inline = [eval_fn(s.actor, s.eval_key) for s in snaps]
+    assert hist.eval_returns == inline
+    assert hist.eval_rounds == [s.round_i for s in snaps]
+    assert hist.env_frames == [s.frames for s in snaps]
+    assert r.stats()["eval_done"] == len(snaps)
+
+
+def test_runtime_two_workers_record_in_round_order():
+    """Workers may finish out of publish order; TrainHistory inserts by
+    round index so the recorded ordering stays deterministic."""
+    hist = TrainHistory()
+    release = threading.Event()
+
+    def eval_fn(actor, key):
+        if actor == "slow":
+            release.wait(5.0)        # round 0 finishes AFTER round 2
+        return float(key)
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist, eval_workers=2)
+    r.publish(_snap(0, "slow"))
+    time.sleep(0.05)                 # let worker A claim round 0
+    r.publish(_snap(2, "fast"))
+    deadline = time.time() + 5.0
+    while len(hist.eval_returns) < 1 and time.time() < deadline:
+        time.sleep(0.01)             # round 2 lands first...
+    release.set()
+    r.close()
+    assert hist.eval_rounds == [0, 2]            # ...but records in order
+    assert hist.eval_returns == [0.0, 2.0]
+
+
+def test_runtime_latest_wins_drops_stale_snapshots():
+    hist = TrainHistory()
+    gate = threading.Event()
+
+    def eval_fn(actor, key):
+        gate.wait(5.0)
+        return float(key)
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist)
+    r.publish(_snap(0, "x"))
+    time.sleep(0.05)                 # worker claims round 0, blocks
+    r.publish(_snap(1, "x"))
+    r.publish(_snap(2, "x"))         # replaces round 1 in the mailbox
+    gate.set()
+    r.close()
+    assert hist.eval_rounds == [0, 2]
+    assert r.stats()["eval_dropped"] == 1
+
+
+def test_runtime_solved_event_carries_publish_time():
+    hist = TrainHistory()
+    r = HostRuntime(eval_fn=lambda a, k: 100.0, hist=hist,
+                    target_return=50.0)
+    r.publish(_snap(4, "x", t=7.25))
+    r.drain()
+    assert r.solved.is_set()
+    assert r.solved_time == 7.25
+    r.close()
+
+
+def test_runtime_worker_error_reraised_in_train_thread():
+    def eval_fn(actor, key):
+        raise ValueError("boom")
+
+    r = HostRuntime(eval_fn=eval_fn, hist=TrainHistory())
+    r.publish(_snap(0, "x"))
+    with pytest.raises(RuntimeError) as ei:
+        r.close()
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+def test_runtime_ssd_channel_materializes_once_per_snapshot():
+    """The SSD channel worker saves/restores ONCE and fans the same
+    materialized actor out to both eval and viz."""
+    hist = TrainHistory()
+    calls = []
+    seen = {}
+
+    def materialize(actor):
+        calls.append(actor)
+        return ("materialized", actor)
+
+    def eval_fn(actor, key):
+        seen["eval"] = actor
+        return 0.0
+
+    def viz_fn(actor, key, round_i):
+        seen["viz"] = actor
+
+    r = HostRuntime(eval_fn=eval_fn, viz_fn=viz_fn, hist=hist,
+                    materialize_fn=materialize)
+    r.publish(_snap(3, "weights", want_viz=True))
+    r.close()
+    assert calls == ["weights"]                  # one save per snapshot
+    assert seen["eval"] is seen["viz"] == ("materialized", "weights")
+
+
+def _mk_cfg(**kw):
+    base = dict(env_name="pendulum", num_envs=2, batch_size=32,
+                chunk_len=4, updates_per_round=1, warmup_frames=32,
+                replay_capacity=512, eval_every_rounds=2, eval_episodes=2,
+                rounds_per_dispatch=2, seed=11)
+    base.update(kw)
+    return SpreezeConfig(**base)
+
+
+def test_trainer_async_matches_inline_eval_returns():
+    """Driven by max_frames (deterministic round count), the async
+    runtime scores the same snapshot/key pairs as the inline path:
+    identical returns for every round it scores, and the final window
+    is always scored (the last publish survives latest-wins + drain)."""
+    def run(async_eval):
+        tr = SpreezeTrainer(_mk_cfg(async_eval=async_eval))
+        # warmup 32 frames + 3 fused dispatches of 16 frames
+        return tr.train(max_seconds=1e9, max_frames=32 + 16 * 3)
+
+    inline, asyn = run(False), run(True)
+    assert inline.eval_rounds == [0, 2, 4]
+    # async may drop intermediate rounds (latest-wins) but never the
+    # first claim or the final publish, and what it scores is identical
+    assert set(asyn.eval_rounds) <= set(inline.eval_rounds)
+    assert asyn.eval_rounds[-1] == inline.eval_rounds[-1]
+    for r, ret in zip(asyn.eval_rounds, asyn.eval_returns):
+        assert ret == inline.eval_returns[inline.eval_rounds.index(r)]
+    assert asyn.eval_rounds == sorted(asyn.eval_rounds)
+
+
+def test_trainer_async_ssd_weight_sync_off_thread(monkeypatch):
+    """weight_sync="ssd" under the async runtime: saves happen on the
+    channel worker, never on the train thread."""
+    from repro.train import checkpoint
+    train_thread = threading.current_thread()
+    save_threads = []
+    orig = checkpoint.save
+
+    def spying_save(path, tree, metadata=None):
+        save_threads.append(threading.current_thread())
+        return orig(path, tree, metadata)
+
+    monkeypatch.setattr(checkpoint, "save", spying_save)
+    tr = SpreezeTrainer(_mk_cfg(weight_sync="ssd"))
+    hist = tr.train(max_seconds=1e9, max_frames=32 + 16 * 2)
+    assert len(hist.eval_returns) >= 1
+    assert save_threads, "SSD channel never wrote weights"
+    assert all(t is not train_thread for t in save_threads)
+
+
+def test_trainer_async_rejects_sync_mode():
+    with pytest.raises(ValueError):
+        SpreezeTrainer(_mk_cfg(async_eval=True, sync_mode=True,
+                               fused=False))
+    # auto mode resolves to inline under the sync ablation
+    tr = SpreezeTrainer(_mk_cfg(sync_mode=True, fused=False))
+    assert not tr.use_async_eval
+
+
+def test_trainer_async_visualization_process(tmp_path):
+    cfg = _mk_cfg(viz_every_rounds=2, viz_dir=str(tmp_path),
+                  eval_every_rounds=2)
+    tr = SpreezeTrainer(cfg)
+    tr.train(max_seconds=1e9, max_frames=32 + 16 * 2)
+    import glob
+    trajs = sorted(glob.glob(str(tmp_path / "traj_*.npz")))
+    assert trajs, "async viz worker wrote no trajectories"
+    d = np.load(trajs[0])
+    assert d["obs"].shape == (200, 3) and np.isfinite(d["rew"]).all()
