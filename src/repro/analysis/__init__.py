@@ -1,0 +1,1 @@
+"""Static-analysis tooling over the repro source tree (CI-enforced)."""

@@ -1,0 +1,9 @@
+"""tracelint: trace-hygiene & sharding-contract static analyzer.
+
+Run ``python -m repro.analysis.tracelint src/`` (see docs/tracelint.md).
+"""
+from repro.analysis.tracelint.engine import (BaselineEntry, Finding,
+                                             LintModule, run)
+from repro.analysis.tracelint.config import LintConfig
+
+__all__ = ["BaselineEntry", "Finding", "LintModule", "LintConfig", "run"]

@@ -1,0 +1,79 @@
+"""``python -m repro.analysis.tracelint [paths...]``
+
+Exit codes: 0 clean; 1 non-baselined findings; 2 stale baseline
+entries or malformed baseline (stale wins — a baseline that no longer
+pins real lines must be regenerated before findings are trustworthy).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.tracelint import engine
+from repro.analysis.tracelint.config import LintConfig
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.tracelint",
+        description="trace-hygiene & sharding-contract static analyzer")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files/directories to scan (default: src)")
+    p.add_argument("--baseline", default="tracelint-baseline.txt",
+                   help="baseline-suppressions file (default: "
+                        "tracelint-baseline.txt; use '' to disable)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write the current findings to --baseline "
+                        "instead of failing on them")
+    p.add_argument("--reason", default="pre-existing; triaged at baseline "
+                                       "creation",
+                   help="reason string recorded with --write-baseline")
+    p.add_argument("--vmem-budget", type=int,
+                   default=LintConfig.vmem_budget_bytes,
+                   help="static VMEM scratch byte budget per pallas_call")
+    p.add_argument("--no-contract", action="store_true",
+                   help="skip the distributed/sharding.py contract-"
+                        "annotation requirement (fixture corpora)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    paths = args.paths or ["src"]
+    cfg = LintConfig(vmem_budget_bytes=args.vmem_budget,
+                     require_contract=not args.no_contract)
+    baseline = args.baseline or None
+    try:
+        findings, stale, modules = engine.run(paths, cfg=cfg,
+                                              baseline_path=baseline)
+    except (SyntaxError, ValueError) as e:
+        print(f"tracelint: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        if not baseline:
+            print("tracelint: --write-baseline needs --baseline",
+                  file=sys.stderr)
+            return 2
+        engine.write_baseline(baseline, findings, modules, args.reason)
+        print(f"tracelint: wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to {baseline}")
+        return 0
+
+    for s in stale:
+        print(f"tracelint: {s}", file=sys.stderr)
+    for f in findings:
+        print(f.format())
+    n_files = len(modules)
+    if stale:
+        print(f"tracelint: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} — regenerate with "
+              f"--write-baseline after triage", file=sys.stderr)
+        return 2
+    if findings:
+        print(f"tracelint: {len(findings)} finding"
+              f"{'' if len(findings) == 1 else 's'} in {n_files} files")
+        return 1
+    print(f"tracelint: clean ({n_files} files)")
+    return 0

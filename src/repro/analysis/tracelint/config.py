@@ -1,0 +1,95 @@
+"""tracelint configuration: module classification + rule budgets.
+
+The analyzer's model of the codebase lives here, not in the rules:
+which modules are *hot-loop* (everything that executes inside or feeds
+the fused megastep — host transfers there are throughput bugs), which
+are *host-side by design* (the async runtime, checkpointing, the
+host-queue ablation — transfers there are the whole point), and the
+static budgets (VMEM scratch bytes). ``docs/tracelint.md`` documents
+how to extend these lists when new modules join the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+# Modules whose code runs inside (or dispatches) the device-resident
+# hot loop: the fused megastep and everything it traces. Matched as
+# posix path suffixes (files) or infixes (directories).
+HOT_MODULES: Tuple[str, ...] = (
+    "repro/core/pipeline.py",     # megastep + train loop dispatch path
+    "repro/train/trainer.py",     # LM train_step loop (timed rounds)
+    "repro/kernels/",             # Pallas kernels + wrappers
+    "repro/replay/",              # ring buffer / PER (traced by megastep)
+)
+
+# Host-side modules where transfers/syncs are by design; they override
+# HOT_MODULES (e.g. replay/host_queue.py IS the host-transfer baseline).
+HOST_ALLOW: Tuple[str, ...] = (
+    "repro/core/runtime.py",      # async eval/viz workers (own threads)
+    "repro/train/checkpoint.py",  # SSD weight channel
+    "repro/replay/host_queue.py", # Fig. 4a host-queue ablation
+    "repro/launch/",              # entry points, dryrun analysis
+    "repro/analysis/",            # this tool
+    "benchmarks/",                # host-side timing harnesses
+)
+
+# The one module allowed to mutate global jax/XLA configuration.
+CONFIG_FILES: Tuple[str, ...] = (
+    "repro/__init__.py",
+)
+
+# Where the mesh axis universe is declared (``jax.make_mesh`` calls are
+# harvested from every scanned file; these suffixes are where the
+# declarations are *expected* — rule sharding-axes falls back to
+# DEFAULT_MESH_AXES when a scan contains no declaration at all, e.g.
+# a fixture corpus).
+MESH_DECL_FILES: Tuple[str, ...] = (
+    "launch/mesh.py",
+)
+DEFAULT_MESH_AXES: Tuple[str, ...] = ("ac", "batch", "data", "model",
+                                      "pod", "host")
+
+# Module that must carry the machine-checkable all_gather ordering
+# contract (PR 4's candidate-merge contract; see docs/tracelint.md).
+CONTRACT_FILE: str = "distributed/sharding.py"
+
+
+@dataclass(frozen=True)
+class LintConfig:
+    hot_modules: Tuple[str, ...] = HOT_MODULES
+    host_allow: Tuple[str, ...] = HOST_ALLOW
+    config_files: Tuple[str, ...] = CONFIG_FILES
+    contract_file: str = CONTRACT_FILE
+    default_mesh_axes: Tuple[str, ...] = DEFAULT_MESH_AXES
+    # static VMEM scratch budget per pallas_call (literal shapes only);
+    # ~half a v5e core's VMEM, leaving room for the pipeline's own
+    # double-buffered block tiles
+    vmem_budget_bytes: int = 8 * 1024 * 1024
+    # require the ALLGATHER contract annotation when contract_file is in
+    # the scan set (off for fixture corpora that don't carry one)
+    require_contract: bool = True
+
+
+def _match(rel: str, patterns: Tuple[str, ...]) -> bool:
+    rel = rel.replace("\\", "/")
+    for p in patterns:
+        if p.endswith("/"):
+            if ("/" + rel).find("/" + p) >= 0 or rel.startswith(p):
+                return True
+        elif rel == p or rel.endswith("/" + p):
+            return True
+    return False
+
+
+def is_hot(rel: str, cfg: LintConfig) -> bool:
+    """Hot-loop module: host-transfer rules apply (host allowlist wins)."""
+    return _match(rel, cfg.hot_modules) and not _match(rel, cfg.host_allow)
+
+
+def is_config_file(rel: str, cfg: LintConfig) -> bool:
+    return _match(rel, cfg.config_files)
+
+
+def is_contract_file(rel: str, cfg: LintConfig) -> bool:
+    return _match(rel, (cfg.contract_file,))

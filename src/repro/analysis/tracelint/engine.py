@@ -1,0 +1,253 @@
+"""tracelint engine: file walking, findings, suppressions, baseline.
+
+A *finding* is (rule, path, line, message). Three ways to silence one:
+
+* fix the code (preferred);
+* an inline suppression on the offending line or the comment line
+  directly above it::
+
+      x = float(loss)  # tracelint: allow[host-transfer] -- post-run conversion
+
+  the reason after ``--`` is mandatory — a bare ``allow[...]`` is itself
+  reported (rule ``suppression``);
+* a baseline entry (``tracelint-baseline.txt``), for findings owned by
+  a file you'd rather not annotate::
+
+      config-mutation | src/repro/launch/dryrun.py:2 | sets XLA flags before first jax import | os.environ[...] = ...
+
+  Baseline entries pin the *source text* of the line: if the file
+  moves, the line shifts, or the text changes, the entry is **stale**
+  and the run fails (exit 2) until the baseline is regenerated — stale
+  suppressions never silently outlive the code they excused.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.tracelint.config import LintConfig
+
+RULES = (
+    "host-transfer",      # D2H/H2D/sync in hot-loop modules
+    "prng-reuse",         # a split/fold key consumed twice
+    "donation-reuse",     # donated buffer read after the jitted call
+    "sharding-axes",      # collective axis names vs the declared mesh
+    "pallas-call",        # interpret threading, VMEM budget, block divisibility
+    "config-mutation",    # jax.config/env mutation outside repro/__init__
+    "suppression",        # malformed/bare inline suppressions
+)
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str            # posix relpath from the invocation cwd
+    line: int
+    rule: str
+    msg: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+@dataclass
+class LintModule:
+    path: str                     # relpath (posix)
+    tree: ast.AST
+    lines: List[str]              # raw source lines
+
+    def src(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+# --------------------------------------------------------------------------- #
+# inline suppressions
+# --------------------------------------------------------------------------- #
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*tracelint:\s*allow\[([a-z*\-, ]+)\]\s*(?:--\s*(\S.*))?")
+
+
+def parse_suppressions(mod: LintModule):
+    """-> {line: (rules frozenset, reason|None)}. A suppression on a
+    comment-only line also covers the next source line."""
+    out: Dict[int, Tuple[frozenset, Optional[str]]] = {}
+    for i, text in enumerate(mod.lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = frozenset(r.strip() for r in m.group(1).split(",")
+                          if r.strip())
+        reason = m.group(2).strip() if m.group(2) else None
+        out[i] = (rules, reason)
+        if text.strip().startswith("#"):      # comment-only: covers next line
+            out[i + 1] = (rules, reason)
+    return out
+
+
+def apply_suppressions(findings: List[Finding], mod: LintModule
+                       ) -> List[Finding]:
+    sup = parse_suppressions(mod)
+    if not sup:
+        return findings
+    kept = []
+    for f in findings:
+        hit = sup.get(f.line)
+        if hit and (f.rule in hit[0] or "*" in hit[0]):
+            continue
+        kept.append(f)
+    # bare suppressions (no reason) are findings themselves, reported at
+    # the comment line only (not the derived next-line entry)
+    for i, text in enumerate(mod.lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m and not (m.group(2) and m.group(2).strip()):
+            kept.append(Finding(mod.path, i, "suppression",
+                                "suppression without a reason — append "
+                                "'-- <why this is allowed>'"))
+    return kept
+
+
+# --------------------------------------------------------------------------- #
+# baseline
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    line: int
+    reason: str
+    src: str                      # stripped source text pinned at entry time
+
+    def format(self) -> str:
+        return (f"{self.rule} | {self.path}:{self.line} | {self.reason} | "
+                f"{self.src}")
+
+
+def load_baseline(path: str) -> List[BaselineEntry]:
+    entries: List[BaselineEntry] = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for ln, raw in enumerate(f, start=1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = [p.strip() for p in line.split("|", 3)]
+            if len(parts) != 4 or not all(parts):
+                raise ValueError(
+                    f"{path}:{ln}: malformed baseline entry (want "
+                    f"'rule | path:line | reason | source'): {line!r}")
+            loc = parts[1].rsplit(":", 1)
+            if len(loc) != 2 or not loc[1].isdigit():
+                raise ValueError(
+                    f"{path}:{ln}: bad location {parts[1]!r} (want "
+                    f"path:line)")
+            entries.append(BaselineEntry(rule=parts[0], path=loc[0],
+                                         line=int(loc[1]), reason=parts[2],
+                                         src=parts[3]))
+    return entries
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   modules: Dict[str, LintModule], reason: str) -> None:
+    with open(path, "w") as f:
+        f.write("# tracelint baseline — each entry excuses ONE finding "
+                "at a pinned source line.\n"
+                "# Format: rule | path:line | reason | source text\n"
+                "# Entries go stale (CI fails) when the pinned line "
+                "moves or changes.\n")
+        for fd in sorted(findings):
+            mod = modules.get(fd.path)
+            src = mod.src(fd.line) if mod else ""
+            f.write(BaselineEntry(fd.rule, fd.path, fd.line, reason,
+                                  src).format() + "\n")
+
+
+def check_baseline(entries: Sequence[BaselineEntry],
+                   modules: Dict[str, LintModule]) -> List[str]:
+    """-> list of stale-entry error strings (entry points at a line that
+    no longer exists or whose source text changed)."""
+    stale = []
+    for e in entries:
+        mod = modules.get(e.path)
+        if mod is None:
+            if os.path.exists(e.path):
+                with open(e.path) as f:
+                    lines = f.read().splitlines()
+                src = (lines[e.line - 1].strip()
+                       if 1 <= e.line <= len(lines) else None)
+            else:
+                src = None
+        else:
+            src = mod.src(e.line) or None
+        if src is None:
+            stale.append(f"stale baseline entry (no such line): "
+                         f"{e.format()}")
+        elif src != e.src:
+            stale.append(f"stale baseline entry (source changed to "
+                         f"{src!r}): {e.format()}")
+    return stale
+
+
+def apply_baseline(findings: List[Finding],
+                   entries: Sequence[BaselineEntry]) -> List[Finding]:
+    index = {(e.rule, e.path, e.line) for e in entries}
+    return [f for f in findings if (f.rule, f.path, f.line) not in index]
+
+
+# --------------------------------------------------------------------------- #
+# runner
+# --------------------------------------------------------------------------- #
+
+def collect_modules(paths: Sequence[str]) -> Dict[str, LintModule]:
+    """Parse every .py under ``paths`` -> {relpath: LintModule}."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    out: Dict[str, LintModule] = {}
+    for fp in sorted(set(files)):
+        rel = os.path.relpath(fp).replace(os.sep, "/")
+        with open(fp) as f:
+            src = f.read()
+        try:
+            tree = ast.parse(src, filename=fp)
+        except SyntaxError as e:
+            raise SyntaxError(f"tracelint cannot parse {rel}: {e}") from e
+        out[rel] = LintModule(path=rel, tree=tree, lines=src.splitlines())
+    return out
+
+
+def run(paths: Sequence[str], cfg: Optional[LintConfig] = None,
+        baseline_path: Optional[str] = None):
+    """Run every rule over ``paths``.
+
+    -> (findings, stale, modules): non-suppressed, non-baselined
+    findings (sorted); stale-baseline error strings; the parsed modules
+    (for --write-baseline).
+    """
+    from repro.analysis.tracelint import rules as R
+    cfg = cfg or LintConfig()
+    modules = collect_modules(paths)
+    ctx = R.build_context(modules, cfg)
+    findings: List[Finding] = []
+    for mod in modules.values():
+        per_file: List[Finding] = []
+        for rule_fn in R.ALL_RULES:
+            per_file.extend(rule_fn(mod, ctx))
+        findings.extend(apply_suppressions(per_file, mod))
+    stale: List[str] = []
+    if baseline_path:
+        entries = load_baseline(baseline_path)
+        stale = check_baseline(entries, modules)
+        findings = apply_baseline(findings, entries)
+    return sorted(findings), stale, modules

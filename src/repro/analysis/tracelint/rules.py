@@ -1,0 +1,767 @@
+"""The tracelint rule families.
+
+Each rule is a function ``(LintModule, Context) -> [Finding]``; the
+shared ``Context`` carries cross-file facts (the declared mesh-axis
+universe). Rules are purely syntactic — they reason over the AST plus
+the repo's idioms (``jax``/``jnp``/``np``/``pl``/``pltpu`` import
+names), which is exactly the level reviewer discipline used to operate
+at. Precision over recall: a rule that cannot decide stays silent, so
+every finding is worth reading.
+
+Rule families (ids in ``engine.RULES``):
+
+1.  ``host-transfer`` — in hot-loop modules (``config.HOT_MODULES``):
+    ``jax.device_get`` / ``np.asarray`` / ``.item()`` / ``float()`` /
+    ``int()`` / ``block_until_ready`` calls, and Python ``if`` on a
+    traced value inside a scanned/jitted function.
+2.  ``prng-reuse`` — a key returned by ``jax.random.split``/``fold_in``
+    consumed by two calls (the PR-2 eval/viz key-collision class).
+    Folding one parent key with *distinct* constants is the sanctioned
+    stream-derivation idiom and stays legal.
+3.  ``donation-reuse`` — an argument at a ``donate_argnums`` position
+    of a jitted callable read after the call (or never rebound inside
+    a loop — the next iteration reads a donated buffer).
+4.  ``sharding-axes`` — literal axis names in ``psum`` / ``all_gather``
+    / ``psum_scatter`` / ``axis_index`` / shard_map specs must come
+    from the mesh axes declared via ``jax.make_mesh``; plus the
+    machine-checkable all_gather candidate-order contract in
+    ``distributed/sharding.py`` (PR 4).
+5.  ``pallas-call`` — every ``pl.pallas_call`` threads ``interpret=``
+    through ``_compat.resolve_interpret``/``interpret_default`` (never
+    hardcoded/omitted), literal VMEM scratch shapes fit the budget,
+    and literal block shapes divide literal out shapes.
+6.  ``config-mutation`` — ``jax.config.update`` / ``os.environ``
+    writes only in ``repro/__init__.py``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.tracelint.config import (LintConfig, is_config_file,
+                                             is_contract_file, is_hot)
+from repro.analysis.tracelint.engine import Finding, LintModule
+
+
+# --------------------------------------------------------------------------- #
+# AST helpers
+# --------------------------------------------------------------------------- #
+
+def dotted(node) -> Optional[str]:
+    """Attribute/Name chain -> 'a.b.c' (None for anything else)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def ends(name: Optional[str], *suffixes: str) -> bool:
+    if name is None:
+        return False
+    return any(name == s or name.endswith("." + s) for s in suffixes)
+
+
+def const_str_items(node) -> Optional[List[str]]:
+    """'x' or ('x','y') of literal strings -> list; else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def const_int_items(node) -> Optional[List[int]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if (isinstance(e, ast.Constant) and isinstance(e.value, int)
+                    and not isinstance(e.value, bool)):
+                out.append(e.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def walk_skipping_defs(body: Sequence[ast.stmt]):
+    """Yield all nodes under ``body`` without descending into nested
+    function/class definitions."""
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                yield child          # the def node itself, not its body
+                continue
+            stack.append(child)
+
+
+# --------------------------------------------------------------------------- #
+# shared context
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class Context:
+    cfg: LintConfig
+    mesh_axes: FrozenSet[str]
+    mesh_axes_declared: bool      # False -> fell back to the default set
+
+
+def build_context(modules: Dict[str, LintModule], cfg: LintConfig
+                  ) -> Context:
+    """Pre-pass: harvest the mesh-axis universe from every
+    ``jax.make_mesh(shape, axes)`` call in the scan set."""
+    axes: Set[str] = set()
+    for mod in modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and \
+                    ends(dotted(node.func), "make_mesh"):
+                arg = (node.args[1] if len(node.args) > 1
+                       else kwarg(node, "axis_names"))
+                items = const_str_items(arg) if arg is not None else None
+                if items:
+                    axes.update(items)
+    if axes:
+        return Context(cfg=cfg, mesh_axes=frozenset(axes),
+                       mesh_axes_declared=True)
+    return Context(cfg=cfg, mesh_axes=frozenset(cfg.default_mesh_axes),
+                   mesh_axes_declared=False)
+
+
+# --------------------------------------------------------------------------- #
+# rule 1: host-transfer hygiene
+# --------------------------------------------------------------------------- #
+
+_TRANSFER_CALLS = ("device_get", "block_until_ready")
+_NP_HOST_CALLS = ("np.asarray", "numpy.asarray", "np.array", "numpy.array",
+                  "onp.asarray")
+_TRACE_ENTRYPOINTS = ("scan", "fori_loop", "while_loop", "vmap", "jit",
+                      "shard_map", "pmap")
+
+
+def _traced_defs(mod: LintModule) -> Set[ast.FunctionDef]:
+    """Function defs whose bodies run under trace: passed by name to
+    scan/fori_loop/while_loop/vmap/jit/shard_map, or jit-decorated —
+    plus, transitively, defs nested inside those."""
+    defs: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, []).append(node)
+    traced: Set[ast.FunctionDef] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and \
+                ends(dotted(node.func), *_TRACE_ENTRYPOINTS):
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(a, ast.Name) and a.id in defs:
+                    traced.update(defs[a.id])
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                if ends(dotted(d), "jit", "vmap", "pmap"):
+                    traced.add(node)
+    # nested defs of a traced def are traced too
+    grow = True
+    while grow:
+        grow = False
+        for fn in list(traced):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.FunctionDef) and node not in traced:
+                    traced.add(node)
+                    grow = True
+    return traced
+
+
+def check_host_transfer(mod: LintModule, ctx: Context) -> List[Finding]:
+    if not is_hot(mod.path, ctx.cfg):
+        return []
+    out: List[Finding] = []
+
+    def f(node, msg):
+        out.append(Finding(mod.path, node.lineno, "host-transfer", msg))
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if ends(name, *_TRANSFER_CALLS):
+            f(node, f"`{name}` is a host sync/transfer inside a hot-loop "
+                    f"module — move it off the megastep path or allow "
+                    f"with a reason")
+        elif name in _NP_HOST_CALLS:
+            f(node, f"`{name}` forces a device->host copy in a hot-loop "
+                    f"module")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "item" and not node.args
+              and not node.keywords):
+            f(node, "`.item()` blocks on a device->host transfer in a "
+                    "hot-loop module")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in ("float", "int") and node.args
+              and not isinstance(node.args[0], ast.Constant)):
+            f(node, f"`{node.func.id}(...)` materializes a device value "
+                    f"on host inside a hot-loop module")
+
+    # Python `if` on a traced value: inside a scanned/jitted function,
+    # branching on a function parameter (a tracer) either fails at trace
+    # time or — worse — silently bakes one branch into the compiled
+    # program (the PR-3 silent-fallback class)
+    for fn in _traced_defs(mod):
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        for node in walk_skipping_defs(fn.body):
+            if isinstance(node, ast.If):
+                names = {n.id for n in ast.walk(node.test)
+                         if isinstance(n, ast.Name)}
+                hit = names & params
+                if hit:
+                    out.append(Finding(
+                        mod.path, node.lineno, "host-transfer",
+                        f"Python `if` on traced value(s) "
+                        f"{sorted(hit)} inside traced function "
+                        f"`{fn.name}` — use jnp.where/lax.cond"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule 2: PRNG discipline
+# --------------------------------------------------------------------------- #
+
+_KEY_SOURCES = ("random.split", "random.fold_in", "random.PRNGKey",
+                "random.key")
+
+
+class _PrngScope:
+    """Source-ordered single-consumption tracking for one function
+    scope. Keys live in local Names only (attributes are long-lived
+    streams with their own fold discipline)."""
+
+    def __init__(self, mod: LintModule, out: List[Finding]):
+        self.mod, self.out = mod, out
+        # name -> {"nonfold": int, "folds": set[str]}
+        self.keys: Dict[str, Dict] = {}
+
+    # -- statements (in order) --------------------------------------- #
+    def stmts(self, body: Sequence[ast.stmt]):
+        for s in body:
+            self.stmt(s)
+
+    def stmt(self, s: ast.stmt):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            return                               # separate scope
+        if isinstance(s, ast.Assign):
+            self.expr(s.value)
+            for t in s.targets:
+                self.bind(t, s.value)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self.expr(s.value)
+                self.bind(s.target, s.value)
+        elif isinstance(s, ast.AugAssign):
+            self.expr(s.value)
+            self.bind(s.target, None)
+        elif isinstance(s, ast.For):
+            self.expr(s.iter)
+            self.bind(s.target, None)
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.While):
+            self.expr(s.test)
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.If):
+            # fork: body/orelse are exclusive, so consumption in one
+            # branch must not flag the other; merge conservatively after
+            self.expr(s.test)
+            entry = {n: {"nonfold": e["nonfold"],
+                         "folds": set(e["folds"])}
+                     for n, e in self.keys.items()}
+            self.stmts(s.body)
+            after_body = self.keys
+            self.keys = entry
+            self.stmts(s.orelse)
+            merged: Dict[str, Dict] = {}
+            for n in set(after_body) | set(self.keys):
+                a, b = after_body.get(n), self.keys.get(n)
+                if a is None or b is None:
+                    merged[n] = a or b
+                else:
+                    merged[n] = {"nonfold": max(a["nonfold"],
+                                                b["nonfold"]),
+                                 "folds": a["folds"] | b["folds"]}
+            self.keys = merged
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self.bind(item.optional_vars, None)
+            self.stmts(s.body)
+        elif isinstance(s, ast.Try):
+            self.stmts(s.body)
+            for h in s.handlers:
+                self.stmts(h.body)
+            self.stmts(s.orelse)
+            self.stmts(s.finalbody)
+        else:
+            for child in ast.iter_child_nodes(s):
+                if isinstance(child, ast.expr):
+                    self.expr(child)
+
+    def bind(self, target: ast.expr, value: Optional[ast.expr]):
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target.id]
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            names = [e.id for e in target.elts if isinstance(e, ast.Name)]
+        fresh = value is not None and isinstance(value, ast.Call) and \
+            ends(dotted(value.func), *_KEY_SOURCES)
+        for n in names:
+            if fresh:
+                self.keys[n] = {"nonfold": 0, "folds": set()}
+            else:
+                self.keys.pop(n, None)           # rebound to a non-key
+
+    # -- expressions: attribute each Name use to its nearest Call ----- #
+    def expr(self, e: Optional[ast.expr], owner: Optional[ast.Call] = None):
+        if e is None:
+            return
+        if isinstance(e, ast.Call):
+            self.expr(e.func, owner)
+            for a in e.args:
+                self.expr(a, e)
+            for kw in e.keywords:
+                self.expr(kw.value, e)
+            return
+        if isinstance(e, (ast.Lambda, ast.FunctionDef)):
+            return                               # separate scope
+        if isinstance(e, ast.Subscript):
+            # key-array indexing (split(key, N)[i]) is per-stream access
+            self.expr(e.slice, owner)
+            return
+        if isinstance(e, ast.Name) and isinstance(e.ctx, ast.Load):
+            if owner is not None and e.id in self.keys:
+                self.consume(e.id, owner, e)
+            return
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                self.expr(child, owner)
+
+    def consume(self, name: str, call: ast.Call, use: ast.Name):
+        entry = self.keys[name]
+        fname = dotted(call.func)
+        if ends(fname, "fold_in"):
+            data = call.args[1] if len(call.args) > 1 else kwarg(call,
+                                                                 "data")
+            text = ast.unparse(data) if data is not None else "?"
+            if entry["nonfold"]:
+                self._flag(use, name, "folded after being consumed")
+            elif text in entry["folds"]:
+                self._flag(use, name,
+                           f"folded twice with the same data ({text}) — "
+                           f"two streams collide")
+            else:
+                entry["folds"].add(text)
+        else:
+            if entry["nonfold"] or entry["folds"]:
+                self._flag(use, name, "consumed more than once — split a "
+                                      "fresh subkey per consumer")
+            entry["nonfold"] += 1
+
+    def _flag(self, node, name, why):
+        self.out.append(Finding(
+            self.mod.path, node.lineno, "prng-reuse",
+            f"PRNG key `{name}` {why} (eval/viz key-collision class)"))
+
+
+def check_prng(mod: LintModule, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    scopes = [mod.tree] + [n for n in ast.walk(mod.tree)
+                           if isinstance(n, ast.FunctionDef)]
+    for scope in scopes:
+        body = scope.body if hasattr(scope, "body") else []
+        _PrngScope(mod, out).stmts(body)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule 3: donation safety
+# --------------------------------------------------------------------------- #
+
+def _donate_positions(call: ast.Call) -> Optional[List[int]]:
+    if not ends(dotted(call.func), "jit"):
+        return None
+    val = kwarg(call, "donate_argnums")
+    if val is None:
+        return None
+    return const_int_items(val)
+
+
+def _target_texts(stmt: ast.stmt) -> Set[str]:
+    texts: Set[str] = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+        for e in elts:
+            d = dotted(e)
+            if d:
+                texts.add(d)
+    return texts
+
+
+def check_donation(mod: LintModule, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    # 1. map 'name' / 'self.attr' -> donated positions
+    donated: Dict[str, List[int]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donate_positions(node.value)
+            if pos:
+                for text in _target_texts(node):
+                    donated[text] = pos
+
+    if not donated:
+        return out
+
+    # parent links for statement/loop context
+    parent: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        for child in ast.iter_child_nodes(node):
+            parent[child] = node
+
+    def enclosing(node, kinds):
+        n = parent.get(node)
+        while n is not None and not isinstance(n, kinds):
+            n = parent.get(n)
+        return n
+
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and dotted(node.func) in donated):
+            continue
+        pos = donated[dotted(node.func)]
+        stmt = enclosing(node, (ast.stmt,))
+        rebound = _target_texts(stmt) if stmt is not None else set()
+        fn = enclosing(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Module))
+        loop = enclosing(node, (ast.For, ast.While))
+        loop = loop if (loop is not None and fn is not None
+                        and node.lineno >= loop.lineno
+                        and (enclosing(loop, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef,
+                                              ast.Module)) is fn)) else None
+        for p in pos:
+            if p >= len(node.args):
+                continue
+            text = dotted(node.args[p])
+            if text is None:
+                continue                    # expression arg: fresh value
+            if text in rebound:
+                continue                    # call statement rebinds it
+            if loop is not None:
+                out.append(Finding(
+                    mod.path, node.lineno, "donation-reuse",
+                    f"`{text}` is donated (argnum {p}) but never rebound "
+                    f"in the loop — the next iteration reads a donated "
+                    f"buffer"))
+                continue
+            # linear scan: first later event wins (store -> safe)
+            events = []
+            scope = fn if fn is not None else mod.tree
+            for n2 in walk_skipping_defs(
+                    scope.body if hasattr(scope, "body") else []):
+                if not hasattr(n2, "lineno") or n2.lineno <= node.lineno:
+                    continue
+                if isinstance(n2, ast.stmt):
+                    if text in _target_texts(n2):
+                        events.append((n2.lineno, 0, "store"))
+                d2 = dotted(n2) if isinstance(
+                    n2, (ast.Name, ast.Attribute)) else None
+                if d2 is not None and isinstance(
+                        getattr(n2, "ctx", None), ast.Load) and (
+                        d2 == text or d2.startswith(text + ".")):
+                    events.append((n2.lineno, 1, "load"))
+            events.sort()
+            for ln, _o, kind in events:
+                if kind == "store":
+                    break
+                out.append(Finding(
+                    mod.path, ln, "donation-reuse",
+                    f"`{text}` read after being donated to the jitted "
+                    f"call at line {node.lineno}"))
+                break
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule 4: sharding contracts
+# --------------------------------------------------------------------------- #
+
+_COLLECTIVES_AXIS1 = ("psum", "pmean", "pmax", "pmin", "psum_scatter",
+                      "all_gather", "all_to_all", "ppermute")
+_COLLECTIVES_AXIS0 = ("axis_index", "axis_size")
+
+# required shape of sharding.py's machine-checkable PR-4 contract
+_CONTRACT_NAME = "ALLGATHER_CANDIDATE_CONTRACT"
+_CONTRACT_REQUIRED = {
+    "axes_from": "batch_axes",
+    "order": "row-major",
+    "merge": "merge_topk_candidates",
+}
+
+
+def check_sharding(mod: LintModule, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+
+    def check_axes(node, items, what):
+        for a in items:
+            if a not in ctx.mesh_axes:
+                out.append(Finding(
+                    mod.path, node.lineno, "sharding-axes",
+                    f"{what} axis {a!r} is not a declared mesh axis "
+                    f"({sorted(ctx.mesh_axes)})"))
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if ends(name, *_COLLECTIVES_AXIS1):
+            arg = (node.args[1] if len(node.args) > 1
+                   else kwarg(node, "axis_name"))
+            items = const_str_items(arg) if arg is not None else None
+            if items:
+                check_axes(node, items, f"`{name}`")
+        elif ends(name, *_COLLECTIVES_AXIS0):
+            arg = (node.args[0] if node.args
+                   else kwarg(node, "axis_name"))
+            items = const_str_items(arg) if arg is not None else None
+            if items:
+                check_axes(node, items, f"`{name}`")
+        elif ends(name, "shard_map"):
+            for kw in node.keywords:
+                if kw.arg in ("in_specs", "out_specs"):
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Call) and ends(
+                                dotted(sub.func), "P", "PartitionSpec"):
+                            lits = []
+                            for a in sub.args:
+                                it = const_str_items(a)
+                                if it:
+                                    lits.extend(it)
+                            if lits:
+                                check_axes(sub, lits, "shard_map spec")
+
+    # PR-4 candidate-merge ordering contract, machine-checkable
+    if ctx.cfg.require_contract and is_contract_file(mod.path, ctx.cfg):
+        contract = None
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == _CONTRACT_NAME
+                    for t in node.targets):
+                contract = node
+        if contract is None:
+            out.append(Finding(
+                mod.path, 1, "sharding-axes",
+                f"missing {_CONTRACT_NAME} annotation (the PR-4 "
+                f"all_gather order == batch_group_index row-major "
+                f"contract must be machine-checkable)"))
+        else:
+            vals = {}
+            if isinstance(contract.value, ast.Dict):
+                for k, v in zip(contract.value.keys, contract.value.values):
+                    if isinstance(k, ast.Constant) and \
+                            isinstance(v, ast.Constant):
+                        vals[k.value] = v.value
+            for k, want in _CONTRACT_REQUIRED.items():
+                if vals.get(k) != want:
+                    out.append(Finding(
+                        mod.path, contract.lineno, "sharding-axes",
+                        f"{_CONTRACT_NAME}[{k!r}] must be {want!r} "
+                        f"(got {vals.get(k)!r})"))
+            # the functions the contract names must exist, and
+            # batch_group_index must flatten row-major (mul-accumulate
+            # over axis_index)
+            fns = {n.name: n for n in ast.walk(mod.tree)
+                   if isinstance(n, ast.FunctionDef)}
+            for need in ("batch_axes", "batch_group_index"):
+                if need not in fns:
+                    out.append(Finding(
+                        mod.path, contract.lineno, "sharding-axes",
+                        f"{_CONTRACT_NAME} names `{need}` but the module "
+                        f"does not define it"))
+            bgi = fns.get("batch_group_index")
+            if bgi is not None:
+                has_axis_index = any(
+                    isinstance(n, ast.Call) and ends(dotted(n.func),
+                                                     "axis_index")
+                    for n in ast.walk(bgi))
+                has_mul_acc = any(
+                    isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult)
+                    for n in ast.walk(bgi))
+                if not (has_axis_index and has_mul_acc):
+                    out.append(Finding(
+                        mod.path, bgi.lineno, "sharding-axes",
+                        "batch_group_index no longer flattens row-major "
+                        "(idx * axis_size + axis_index) — the all_gather "
+                        "candidate-merge order contract is broken"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule 5: pallas_call hygiene
+# --------------------------------------------------------------------------- #
+
+_DTYPE_BYTES = {"float64": 8, "int64": 8, "uint64": 8,
+                "float32": 4, "int32": 4, "uint32": 4,
+                "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+                "int8": 1, "uint8": 1, "bool_": 1, "bool": 1}
+
+
+def _dtype_bytes(node) -> int:
+    name = dotted(node)
+    if name is None:
+        return 4
+    return _DTYPE_BYTES.get(name.rsplit(".", 1)[-1], 4)
+
+
+def check_pallas(mod: LintModule, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if ends(name, "VMEM"):
+            dims = const_int_items(node.args[0]) if node.args else None
+            if dims:
+                size = 1
+                for d in dims:
+                    size *= d
+                size *= _dtype_bytes(node.args[1]
+                                     if len(node.args) > 1 else None)
+                if size > ctx.cfg.vmem_budget_bytes:
+                    out.append(Finding(
+                        mod.path, node.lineno, "pallas-call",
+                        f"VMEM scratch of {size} bytes exceeds the "
+                        f"{ctx.cfg.vmem_budget_bytes}-byte budget "
+                        f"(shape {tuple(dims)})"))
+            continue
+        if not ends(name, "pallas_call"):
+            continue
+        interp = kwarg(node, "interpret")
+        if interp is None:
+            out.append(Finding(
+                mod.path, node.lineno, "pallas-call",
+                "pallas_call without `interpret=` — thread "
+                "`interpret=_compat.resolve_interpret(interpret)` so the "
+                "backend default resolves at trace time"))
+        elif isinstance(interp, ast.Constant):
+            out.append(Finding(
+                mod.path, interp.lineno, "pallas-call",
+                f"hardcoded `interpret={interp.value!r}` — resolve via "
+                f"`_compat.resolve_interpret`/`interpret_default` (the "
+                f"PR-3 silent-fallback class)"))
+        elif not (isinstance(interp, ast.Call)
+                  and ends(dotted(interp.func), "resolve_interpret",
+                           "interpret_default")):
+            out.append(Finding(
+                mod.path, interp.lineno, "pallas-call",
+                "`interpret=` must thread through "
+                "`_compat.resolve_interpret(...)` — arbitrary "
+                "expressions drift from the backend default"))
+
+        # literal block-shape divisibility against literal out shapes
+        out_specs = kwarg(node, "out_specs")
+        out_shape = kwarg(node, "out_shape")
+        if out_specs is None or out_shape is None:
+            continue
+        specs = (out_specs.elts
+                 if isinstance(out_specs, (ast.Tuple, ast.List))
+                 else [out_specs])
+        shapes = (out_shape.elts
+                  if isinstance(out_shape, (ast.Tuple, ast.List))
+                  else [out_shape])
+        for spec, shp in zip(specs, shapes):
+            if not (isinstance(spec, ast.Call)
+                    and ends(dotted(spec.func), "BlockSpec")
+                    and spec.args):
+                continue
+            if not (isinstance(shp, ast.Call)
+                    and ends(dotted(shp.func), "ShapeDtypeStruct")
+                    and shp.args):
+                continue
+            block = const_int_items(spec.args[0])
+            shape = const_int_items(shp.args[0])
+            if not block or not shape or len(block) != len(shape):
+                continue
+            for b, s in zip(block, shape):
+                if b and s % b:
+                    out.append(Finding(
+                        mod.path, spec.lineno, "pallas-call",
+                        f"block shape {tuple(block)} does not divide "
+                        f"out shape {tuple(shape)} (dim {s} % {b} != 0)"))
+                    break
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule 6: config / flag hygiene
+# --------------------------------------------------------------------------- #
+
+def check_config(mod: LintModule, ctx: Context) -> List[Finding]:
+    if is_config_file(mod.path, ctx.cfg):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if ends(name, "config.update"):
+                out.append(Finding(
+                    mod.path, node.lineno, "config-mutation",
+                    f"`{name}` outside repro/__init__.py — global jax "
+                    f"config must have exactly one owner"))
+            elif name in ("os.environ.setdefault", "os.environ.update",
+                          "os.environ.pop", "os.putenv"):
+                out.append(Finding(
+                    mod.path, node.lineno, "config-mutation",
+                    f"`{name}` outside repro/__init__.py — env flags "
+                    f"must have exactly one owner"))
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and \
+                        dotted(t.value) == "os.environ":
+                    out.append(Finding(
+                        mod.path, node.lineno, "config-mutation",
+                        "`os.environ[...] = ...` outside "
+                        "repro/__init__.py — env flags must have exactly "
+                        "one owner"))
+    return out
+
+
+ALL_RULES = (check_host_transfer, check_prng, check_donation,
+             check_sharding, check_pallas, check_config)

@@ -152,13 +152,14 @@ def auto_tune(env_name: str = "pendulum", algo: str = "sac", *,
     spec = env.spec
     mod = get_algo(algo)
     hp = AlgoHP(algo=algo)
-    key = jax.random.PRNGKey(0)
-    state = mod.init_state(key, spec.obs_dim, spec.act_dim, hp)
+    k_init, k_replay, key = jax.random.split(jax.random.PRNGKey(0), 3)
+    state = mod.init_state(k_init, spec.obs_dim, spec.act_dim, hp)
     update = mod.make_update_step(hp, spec.obs_dim, spec.act_dim)
     act = mod.make_act(hp)
 
     cap = max(bs_grid) * 2
-    replay = probe_replay(spec.obs_dim, spec.act_dim, cap, hp.gamma, key)
+    replay = probe_replay(spec.obs_dim, spec.act_dim, cap, hp.gamma,
+                          k_replay)
 
     def make_update_call(bs: int):
         step = jax.jit(lambda s, k: update(

@@ -65,6 +65,7 @@ without pinning the training state the next dispatch donates.
 from __future__ import annotations
 
 import bisect
+import contextlib
 import functools
 import os
 import tempfile
@@ -138,6 +139,13 @@ class SpreezeConfig:
     async_eval: Optional[bool] = None
     eval_workers: int = 1
     viz_workers: int = 1
+    # sanitize mode: run every megastep/round dispatch under
+    # jax.transfer_guard("disallow") + jax.debug_nans, turning any
+    # host<->device transfer the dispatch path sneaks in (and any NaN a
+    # kernel produces) into a hard error. Runtime proof of the
+    # device-resident claim tracelint checks statically — CI's
+    # forced-8-device job runs a smoke train() with this on.
+    sanitize: bool = False
     seed: int = 0
     hp: AlgoHP = field(default_factory=AlgoHP)
 
@@ -575,6 +583,7 @@ class SpreezeTrainer:
                                          self._replay_sharding)
             self.env_states = jax.device_put(self.env_states,
                                              self._env_sharding)
+        # tracelint: allow[host-transfer] -- warmup barrier: runs once before the timed window opens
         jax.block_until_ready(jax.tree.leaves(self.replay))
 
     def _viz_dump(self, actor, key, round_i: int) -> None:
@@ -587,8 +596,9 @@ class SpreezeTrainer:
             os.makedirs(self.cfg.viz_dir, exist_ok=True)
             np.savez(os.path.join(self.cfg.viz_dir,
                                   f"traj_{round_i:06d}.npz"),
+                     # tracelint: allow[host-transfer] -- viz .npz dump; runs on async viz workers (or the sync ablation)
                      obs=np.asarray(obs), act=np.asarray(act_tr),
-                     rew=np.asarray(rew))
+                     rew=np.asarray(rew))  # tracelint: allow[host-transfer] -- viz .npz dump (same site as above)
 
     def _make_runtime(self, hist, target_return, log_cb):
         """The host async runtime for one ``train()`` call: eval/viz/SSD
@@ -598,6 +608,7 @@ class SpreezeTrainer:
         # themselves: publishing must stay free of device dispatch (two
         # eager fold_ins on the train thread cost more than the lock)
         return rt.HostRuntime(
+            # tracelint: allow[host-transfer] -- conversion runs on the async eval worker thread, not the train thread
             eval_fn=lambda actor, round_i: float(self._eval(
                 actor, jax.random.fold_in(self._eval_key, round_i))),
             viz_fn=((lambda actor, round_key, round_i: self._viz_dump(
@@ -608,6 +619,19 @@ class SpreezeTrainer:
                             if cfg.weight_sync == "ssd" else None),
             eval_workers=cfg.eval_workers, viz_workers=cfg.viz_workers,
             target_return=target_return, log_cb=log_cb)
+
+    def _sanitize_scope(self):
+        """Guard one hot-loop dispatch when ``cfg.sanitize``:
+        ``transfer_guard("disallow")`` turns any host<->device transfer
+        into an error and ``debug_nans`` any NaN a step produces. Scoped
+        per dispatch so eval/viz/checkpoint (host-side by design) stay
+        guard-free."""
+        if not self.cfg.sanitize:
+            return contextlib.nullcontext()
+        stack = contextlib.ExitStack()
+        stack.enter_context(jax.transfer_guard("disallow"))
+        stack.enter_context(jax.debug_nans(True))
+        return stack
 
     def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
               target_return: Optional[float] = None,
@@ -645,25 +669,31 @@ class SpreezeTrainer:
                     break
                 if self.use_fused:
                     # --- one device-resident megastep = R whole rounds ----
-                    (self.state, self.replay, self.env_states, self.key,
-                     self.last_metrics) = self._megastep(
-                        self.state, self.replay, self.env_states, self.key)
+                    with self._sanitize_scope():
+                        (self.state, self.replay, self.env_states, self.key,
+                         self.last_metrics) = self._megastep(
+                            self.state, self.replay, self.env_states,
+                            self.key)
                     self.total_frames += frames_per_chunk * window
                     self.total_updates += cfg.updates_per_round * window
                 else:
                     # --- sampler "process": dispatch, don't block ---------
-                    self.env_states, exp, self.key, _ = self._sampler(
-                        self.state.actor, self.env_states, self.key)
-                    self.replay = self.transfer.push(self.replay, exp)
+                    with self._sanitize_scope():
+                        self.env_states, exp, self.key, _ = self._sampler(
+                            self.state.actor, self.env_states, self.key)
+                        self.replay = self.transfer.push(self.replay, exp)
                     self.total_frames += frames_per_chunk
                     if cfg.sync_mode:
-                        jax.block_until_ready(exp)  # Fig. 4a: handoff wait
+                        jax.block_until_ready(exp)  # Fig. 4a: handoff wait  # tracelint: allow[host-transfer] -- sync_mode ablation measures exactly this stall
                     # --- updater "process" --------------------------------
-                    self.replay = self.transfer.flush(self.replay)
-                    self.state, self.replay, self.key, closs = \
-                        self._update_round(self.state, self.replay, self.key)
+                    with self._sanitize_scope():
+                        self.replay = self.transfer.flush(self.replay)
+                        self.state, self.replay, self.key, closs = \
+                            self._update_round(self.state, self.replay,
+                                               self.key)
                     self.total_updates += cfg.updates_per_round
                     if cfg.sync_mode:
+                        # tracelint: allow[host-transfer] -- sync_mode ablation measures exactly this stall
                         jax.block_until_ready(closs)
                 # --- eval / viz "processes" -------------------------------
                 want_viz = _window_hits(round_i, window,
@@ -691,6 +721,7 @@ class SpreezeTrainer:
                                 jax.random.fold_in(self._viz_key, round_i),
                                 round_i)
                         if want_eval:
+                            # tracelint: allow[host-transfer] -- inline-eval ablation: blocking the train thread is the measured condition
                             ret = float(self._eval(
                                 self._actor_for_eval(round_i),
                                 jax.random.fold_in(self._eval_key,
@@ -712,6 +743,7 @@ class SpreezeTrainer:
                     hist.eval_blocked_s += time.perf_counter() - tb
                 round_i += window
 
+            # tracelint: allow[host-transfer] -- end-of-run barrier closing the timed window
             jax.block_until_ready(self.state.step)
             wall = time.perf_counter() - t0
         finally:

@@ -28,7 +28,7 @@ def make_batch(cfg: ModelConfig, shape: InputShape, key,
     B = batch or shape.global_batch
     S = seq or shape.seq_len
     st = text_len(cfg, S)
-    k1, k2 = jax.random.split(key)
+    k1, k2, k3 = jax.random.split(key, 3)
     out = {"tokens": jax.random.randint(k1, (B, st), 0, cfg.vocab_size,
                                         dtype=jnp.int32)}
     if cfg.family == "encdec":
@@ -36,7 +36,7 @@ def make_batch(cfg: ModelConfig, shape: InputShape, key,
             k2, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
     if cfg.family == "vlm":
         out["patches"] = jax.random.normal(
-            k2, (B, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
+            k3, (B, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
     return out
 
 

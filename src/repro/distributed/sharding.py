@@ -149,6 +149,21 @@ def trainer_rules(mesh: Mesh, placement: str = "ac") -> MeshRules:
 # shard_map plumbing for the mesh-native replay kernels
 # ---------------------------------------------------------------------------
 
+# Machine-checkable statement of the PR-4 candidate-merge ordering
+# contract (tracelint rule `sharding-axes` validates it): the axis tuple
+# all_gather runs over comes from `batch_axes`, all_gather concatenates
+# groups in the same row-major order `batch_group_index` flattens
+# (first axis most significant), and `merge_topk_candidates` is the
+# consumer whose layout-invariant tie-breaking depends on the two
+# agreeing. Changing any of the three requires changing all of them —
+# and this annotation — together.
+ALLGATHER_CANDIDATE_CONTRACT = {
+    "axes_from": "batch_axes",
+    "order": "row-major",
+    "merge": "merge_topk_candidates",
+}
+
+
 def batch_axes(rules: MeshRules) -> Tuple[str, ...]:
     """The physical mesh axes the ``batch`` logical dim maps to, as a
     tuple (empty when unmapped) — the axis set the shard_map replay

@@ -23,12 +23,11 @@ class Reacher(Env):
                             episode_len=150, difficulty=1)
 
     def reset(self, key):
-        k1, k2, k3 = jax.random.split(key, 3)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
         q = jax.random.uniform(k1, (2,), minval=-jnp.pi, maxval=jnp.pi)
         qd = jax.random.uniform(k2, (2,), minval=-0.5, maxval=0.5)
         r = jax.random.uniform(k3, (), minval=0.3, maxval=0.9)
-        ang = jax.random.uniform(jax.random.fold_in(k3, 1), (),
-                                 minval=-jnp.pi, maxval=jnp.pi)
+        ang = jax.random.uniform(k4, (), minval=-jnp.pi, maxval=jnp.pi)
         target = jnp.stack([r * jnp.cos(ang), r * jnp.sin(ang)])
         return {"q": q, "qd": qd, "target": target,
                 "t": jnp.zeros((), jnp.int32)}

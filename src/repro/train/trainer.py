@@ -69,12 +69,16 @@ def train_loop(rc: RunConfig, batches, *, steps: int, key=None,
     for i, batch in zip(range(steps), batches):
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if i == 0:   # skip compile in the rate
+            # tracelint: allow[host-transfer] -- compile barrier before t0 so warmup never skews timed rounds
             jax.block_until_ready(metrics["loss"])
             t0 = time.perf_counter()
-        losses.append(float(metrics["loss"]))
+        # keep the device scalar; converting here would sync every step
+        losses.append(metrics["loss"])
         if callback:
             callback(i, params, metrics)
+    # tracelint: allow[host-transfer] -- end-of-run barrier outside the timed region
     jax.block_until_ready(params)
     dt = time.perf_counter() - (t0 or time.perf_counter())
     rate = (len(losses) - 1) / dt if dt > 0 and len(losses) > 1 else 0.0
+    losses = [float(x) for x in losses]  # tracelint: allow[host-transfer] -- post-run conversion, after the barrier
     return TrainResult(losses=losses, steps_per_sec=rate)

@@ -1,0 +1,40 @@
+"""Sanitize-mode smoke for the forced-8-device CI job: a sharded
+megastep train() under transfer_guard("disallow") + debug_nans.
+
+Script-style (not pytest-collected): run as
+``PYTHONPATH=src python tests/sanitize_smoke.py`` — forces the 8-device
+host platform itself when the environment hasn't already.
+"""
+import os
+
+if __name__ == "__main__":
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402  (after the XLA_FLAGS fixup above)
+
+
+def main():
+    from repro.core import SpreezeConfig, SpreezeTrainer
+    from repro.launch.mesh import make_ac_mesh
+
+    assert len(jax.devices()) >= 8, len(jax.devices())
+    cfg = SpreezeConfig(env_name="pendulum", algo="sac", num_envs=2,
+                        batch_size=32, chunk_len=4, updates_per_round=2,
+                        warmup_frames=32, replay_capacity=256,
+                        eval_every_rounds=2, eval_episodes=1, seed=3,
+                        rounds_per_dispatch=2, mesh=make_ac_mesh(2, 4),
+                        overlap_eval=True, sanitize=True)
+    hist = SpreezeTrainer(cfg).train(max_seconds=20.0, max_frames=1500)
+    assert hist.sampling_hz > 0 and hist.update_hz > 0, hist
+    assert hist.eval_returns, "eval never ran"
+    print(f"sanitize smoke OK: sampling {hist.sampling_hz:.0f} Hz, "
+          f"update {hist.update_hz:.0f} Hz, "
+          f"{len(hist.eval_returns)} evals under "
+          f"transfer_guard+debug_nans")
+
+
+if __name__ == "__main__":
+    main()

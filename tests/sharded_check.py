@@ -56,7 +56,18 @@ def run_check():
     for tr in (tr_ref, tr_sh):
         tr._warmup()
     _drive(tr_ref, 2)
-    _drive(tr_sh, 2)
+    # the sharded megastep must stay device-resident: drive it under
+    # transfer_guard (runtime form of the tracelint host-transfer rule);
+    # the H2D probe proves the guard is live in this scope
+    with jax.transfer_guard("disallow"):
+        probe_tripped = False
+        try:
+            jax.numpy.asarray([1.0])
+        except Exception as e:
+            probe_tripped = "disallow" in str(e).lower()
+        assert probe_tripped, "transfer_guard not active"
+        _drive(tr_sh, 2)
+        jax.block_until_ready(tr_sh.state.step)
 
     # ring bookkeeping and PRNG threading are integer math: bit-for-bit
     assert int(tr_ref.replay.ptr) == int(tr_sh.replay.ptr)

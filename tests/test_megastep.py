@@ -129,3 +129,18 @@ def test_solved_detection_inside_fused_window(async_eval):
     assert hist.eval_returns and hist.eval_returns[0] >= -1e9
     # solved on (at latest) the first scored window -> far under budget
     assert hist.wall_s < 30.0
+
+
+def test_fused_dispatch_under_transfer_guard():
+    """The fused megastep is device-resident: a whole dispatch (including
+    first compile) runs under ``jax.transfer_guard("disallow")``. The
+    H2D probe proves the guard is actually live in this scope."""
+    import jax.numpy as jnp
+    tr = SpreezeTrainer(_cfg(fused=True, rounds_per_dispatch=2))
+    tr._warmup()
+    with jax.transfer_guard("disallow"):
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            jnp.asarray([1.0])          # guard-activity probe (H2D)
+        _drive_fused(tr, 2)
+        jax.block_until_ready(tr.state.step)
+    assert int(tr.state.step) == 2 * 2 * tr.cfg.updates_per_round

@@ -1,0 +1,228 @@
+"""tracelint's own coverage: the fixture corpus (known-good /
+known-bad per rule family, incl. the PR-2 key-collision and PR-3
+silent-fallback regression shapes), suppressions, the baseline
+round-trip + staleness, the sharding-contract annotation, CLI exit
+codes — and the standing invariant that ``src/`` is clean against the
+checked-in baseline."""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.tracelint import engine
+from repro.analysis.tracelint.cli import main as cli_main
+from repro.analysis.tracelint.config import LintConfig
+
+FIXTURES = os.path.join("tests", "tracelint_fixtures")
+NO_CONTRACT = LintConfig(require_contract=False)
+
+
+def _findings(path, cfg=NO_CONTRACT):
+    findings, stale, _ = engine.run([path], cfg=cfg)
+    assert not stale
+    return findings
+
+
+def _locs(findings):
+    return [(f.path.rsplit("/", 1)[-1], f.line, f.rule) for f in findings]
+
+
+# --------------------------------------------------------------------------- #
+# per-family fixtures: exact counts and locations
+# --------------------------------------------------------------------------- #
+
+BAD_EXPECT = {
+    "bad_host_transfer.py": [
+        (16, "host-transfer"), (17, "host-transfer"), (18, "host-transfer"),
+        (19, "host-transfer"), (20, "host-transfer"),
+        (26, "host-transfer"),          # Python if on a traced value
+    ],
+    "bad_prng.py": [
+        (17, "prng-reuse"),             # PR-2: key to two consumers
+        (24, "prng-reuse"),             # fold twice, same constant
+        (31, "prng-reuse"),             # raw-use + fold-parent mix
+    ],
+    "bad_donation.py": [
+        (13, "donation-reuse"), (19, "donation-reuse"),
+        (26, "donation-reuse"),
+    ],
+    "bad_sharding.py": [
+        (17, "sharding-axes"), (21, "sharding-axes"), (27, "sharding-axes"),
+    ],
+    "bad_pallas.py": [
+        (21, "pallas-call"),            # PR-3: hardcoded interpret=True
+        (26, "pallas-call"), (37, "pallas-call"),
+        (45, "pallas-call"), (55, "pallas-call"),
+    ],
+    "bad_config.py": [
+        (10, "config-mutation"), (11, "config-mutation"),
+        (12, "config-mutation"),
+    ],
+    "bad_suppression.py": [
+        (10, "suppression"),
+    ],
+}
+
+GOOD_FILES = ["good_prng.py", "good_donation.py", "good_sharding.py",
+              "repro/kernels/good_host_transfer.py",
+              "repro/kernels/good_pallas.py"]
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECT))
+def test_bad_fixture_exact_findings(name):
+    sub = "repro/kernels/" + name if name in (
+        "bad_host_transfer.py", "bad_pallas.py") else name
+    findings = _findings(os.path.join(FIXTURES, sub))
+    assert _locs(findings) == [(name, ln, rule)
+                               for ln, rule in BAD_EXPECT[name]]
+
+
+@pytest.mark.parametrize("name", GOOD_FILES)
+def test_good_fixture_clean(name):
+    assert _findings(os.path.join(FIXTURES, name)) == []
+
+
+def test_corpus_total():
+    """Whole-corpus scan agrees with the per-file sums (cross-file mesh
+    harvesting must not change any verdict)."""
+    findings = _findings(FIXTURES)
+    assert len(findings) == sum(map(len, BAD_EXPECT.values()))
+    assert all(f.path.rsplit("/", 1)[-1].startswith("bad_")
+               for f in findings)
+
+
+# --------------------------------------------------------------------------- #
+# suppressions
+# --------------------------------------------------------------------------- #
+
+def test_inline_allow_with_reason_suppresses(tmp_path):
+    f = tmp_path / "repro" / "kernels" / "hot.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""\
+        import jax
+        def g(x):
+            # tracelint: allow[host-transfer] -- measured handoff
+            jax.block_until_ready(x)
+            return jax.device_get(x)  # tracelint: allow[host-transfer] -- result fetch
+    """))
+    assert _findings(str(f)) == []
+
+
+def test_allow_wrong_rule_does_not_suppress(tmp_path):
+    f = tmp_path / "repro" / "kernels" / "hot.py"
+    f.parent.mkdir(parents=True)
+    f.write_text("import jax\n"
+                 "def g(x):\n"
+                 "    return jax.device_get(x)"
+                 "  # tracelint: allow[prng-reuse] -- wrong family\n")
+    [fd] = _findings(str(f))
+    assert fd.rule == "host-transfer" and fd.line == 3
+
+
+# --------------------------------------------------------------------------- #
+# baseline round-trip + staleness
+# --------------------------------------------------------------------------- #
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    src = ("import jax\n"
+           "jax.config.update('jax_enable_x64', True)\n")
+    f = tmp_path / "mod.py"
+    f.write_text(src)
+    baseline = tmp_path / "baseline.txt"
+
+    findings, stale, modules = engine.run([str(f)], cfg=NO_CONTRACT)
+    assert [fd.rule for fd in findings] == ["config-mutation"]
+    engine.write_baseline(str(baseline), findings, modules, "known debt")
+
+    # baselined -> clean
+    findings, stale, _ = engine.run([str(f)], cfg=NO_CONTRACT,
+                                    baseline_path=str(baseline))
+    assert findings == [] and stale == []
+
+    # line content changes -> the entry is stale, not silently matched
+    f.write_text("import jax\n\n"
+                 "jax.config.update('jax_enable_x64', True)\n")
+    findings, stale, _ = engine.run([str(f)], cfg=NO_CONTRACT,
+                                    baseline_path=str(baseline))
+    assert len(stale) == 1 and "stale" in stale[0]
+    assert [fd.line for fd in findings] == [3]   # and the finding is back
+
+
+def test_baseline_rejects_malformed(tmp_path):
+    b = tmp_path / "baseline.txt"
+    b.write_text("config-mutation | not-a-location | reason | src\n")
+    with pytest.raises(ValueError):
+        engine.load_baseline(str(b))
+
+
+# --------------------------------------------------------------------------- #
+# sharding contract annotation (satellite of PR 4's ordering contract)
+# --------------------------------------------------------------------------- #
+
+def test_contract_annotation_required(tmp_path):
+    d = tmp_path / "distributed"
+    d.mkdir()
+    f = d / "sharding.py"
+    f.write_text("def batch_axes(rules):\n    return ()\n")
+    findings, _, _ = engine.run([str(f)], cfg=LintConfig())
+    assert any(f0.rule == "sharding-axes" and
+               "ALLGATHER_CANDIDATE_CONTRACT" in f0.msg for f0 in findings)
+
+
+def test_contract_annotation_field_mismatch(tmp_path):
+    d = tmp_path / "distributed"
+    d.mkdir()
+    f = d / "sharding.py"
+    f.write_text(textwrap.dedent("""\
+        ALLGATHER_CANDIDATE_CONTRACT = {
+            "axes_from": "batch_axes",
+            "order": "column-major",
+            "merge": "merge_topk_candidates",
+        }
+        def batch_axes(rules):
+            return ()
+        def batch_group_index(rules):
+            import jax
+            idx = 0
+            for a in batch_axes(rules):
+                idx = idx * rules.mesh.shape[a] + jax.lax.axis_index(a)
+            return idx
+    """))
+    findings, _, _ = engine.run([str(f)], cfg=LintConfig())
+    assert any("order" in f0.msg and "row-major" in f0.msg
+               for f0 in findings)
+
+
+# --------------------------------------------------------------------------- #
+# the standing invariant + CLI exit codes
+# --------------------------------------------------------------------------- #
+
+def test_src_is_clean_against_checked_in_baseline():
+    """The CI gate, as a test: today's src/ has zero non-baselined
+    findings and zero stale baseline entries."""
+    findings, stale, _ = engine.run(
+        ["src"], baseline_path="tracelint-baseline.txt")
+    assert stale == [], stale
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import jax\n"
+                     "jax.config.update('jax_enable_x64', True)\n")
+
+    assert cli_main([str(clean), "--baseline", "", "--no-contract"]) == 0
+    assert cli_main([str(dirty), "--baseline", "", "--no-contract"]) == 1
+
+    b = tmp_path / "baseline.txt"
+    assert cli_main([str(dirty), "--baseline", str(b), "--no-contract",
+                     "--write-baseline", "--reason", "fixture debt"]) == 0
+    assert cli_main([str(dirty), "--baseline", str(b),
+                     "--no-contract"]) == 0
+    dirty.write_text("import jax\n\n"
+                     "jax.config.update('jax_enable_x64', True)\n")
+    assert cli_main([str(dirty), "--baseline", str(b),
+                     "--no-contract"]) == 2      # stale entry
+    capsys.readouterr()

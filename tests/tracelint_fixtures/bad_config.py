@@ -1,0 +1,12 @@
+"""Known-bad config/flag hygiene: global mutation outside repro/__init__.
+
+  line 10  jax.config.update
+  line 11  os.environ[...] assignment
+  line 12  os.environ.setdefault
+"""
+import os
+import jax
+
+jax.config.update("jax_enable_x64", True)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

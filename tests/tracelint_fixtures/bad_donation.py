@@ -1,0 +1,27 @@
+"""Known-bad donation safety: donated buffers read after the call.
+
+  line 13  params read after being donated (argnum 0)
+  line 19  opt read after being donated (argnum 1)
+  line 26  state donated in a loop but never rebound
+"""
+import jax
+
+
+def read_after_donation(step, params, batch):
+    fn1 = jax.jit(step, donate_argnums=(0,))
+    new_params, loss = fn1(params, batch)
+    return new_params, loss, params.mean()    # params buffer is gone
+
+
+def read_second_argnum(step, params, opt, batch):
+    fn2 = jax.jit(step, donate_argnums=(0, 1))
+    params, new_opt, loss = fn2(params, opt, batch)
+    return params, new_opt, loss, opt         # opt buffer is gone
+
+
+def loop_without_rebind(step, state, batches):
+    fn3 = jax.jit(step, donate_argnums=(0,))
+    outs = []
+    for b in batches:
+        outs.append(fn3(state, b))            # iteration 2 reads donated
+    return outs

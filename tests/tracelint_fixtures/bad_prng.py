@@ -1,0 +1,32 @@
+"""Known-bad PRNG discipline — the PR-2 eval/viz key-collision bug.
+
+PR 2 shipped eval and viz workers that both derived their stream from
+the same subkey, so eval episodes and viz rollouts replayed identical
+randomness. The shapes of that bug:
+
+  line 17  same key consumed by two jax.random consumers
+  line 24  same key folded twice with the same constant
+  line 31  key consumed, then folded (raw-use + fold-parent mix)
+"""
+import jax
+
+
+def collide_direct(key):
+    k_eval, k_viz = jax.random.split(key)
+    a = jax.random.normal(k_eval, (4,))
+    b = jax.random.uniform(k_eval, (4,))      # k_eval consumed twice
+    return a, b, k_viz
+
+
+def collide_fold(key):
+    k_io = jax.random.fold_in(key, 0)
+    e = jax.random.fold_in(k_io, 7)
+    v = jax.random.fold_in(k_io, 7)           # same constant: same stream
+    return e, v
+
+
+def mixed_use(key):
+    k, sub = jax.random.split(key)
+    x = jax.random.normal(sub, (2,))
+    y = jax.random.normal(jax.random.fold_in(sub, 1), (2,))
+    return k, x, y

@@ -1,0 +1,28 @@
+"""Known-bad sharding contracts: axis names outside the declared mesh.
+
+The mesh here declares ("ac", "batch") — matching the repo's AC mesh —
+so every collective/spec over another name is a contract break:
+
+  line 17  psum over undeclared "groups"
+  line 21  all_gather over undeclared "rows"
+  line 27  shard_map in_specs P("data") not in this mesh
+"""
+import jax
+from jax.sharding import PartitionSpec as P
+
+MESH = jax.make_mesh((2, 4), ("ac", "batch"))
+
+
+def bad_psum(x):
+    return jax.lax.psum(x, "groups")
+
+
+def bad_gather(x):
+    return jax.lax.all_gather(x, "rows", tiled=True)
+
+
+def bad_spec(fn, x):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=MESH,
+                     in_specs=(P("data"),),
+                     out_specs=P("batch"))(x)

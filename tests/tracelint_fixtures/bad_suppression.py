@@ -1,0 +1,11 @@
+"""Known-bad suppression hygiene.
+
+A reasonless allow (line 10) still suppresses its target rule, but is
+itself reported as a ``suppression`` finding — so CI stays red until a
+reason lands after ``--``.
+"""
+import jax
+
+
+def bare(x):  # tracelint: allow[prng-reuse]
+    return jax.random.split(x)

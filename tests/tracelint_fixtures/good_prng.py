@@ -1,0 +1,36 @@
+"""Known-good PRNG discipline: zero expected findings.
+
+One split per consumer, fold_in with *distinct* constants (the repo's
+sanctioned multi-stream idiom — pipeline derives eval/viz streams this
+way), rebinding a consumed key to a fresh one, and consumption split
+across exclusive if/else branches.
+"""
+import jax
+
+
+def one_each(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)), jax.random.uniform(k2, (4,))
+
+
+def streams(key):
+    k_io = jax.random.fold_in(key, 0)
+    k_eval = jax.random.fold_in(k_io, 1)      # distinct constants:
+    k_viz = jax.random.fold_in(k_io, 2)       # distinct streams
+    return jax.random.normal(k_eval, ()), jax.random.normal(k_viz, ())
+
+
+def rebind(key):
+    k = jax.random.fold_in(key, 0)
+    x = jax.random.normal(k, ())
+    k = jax.random.fold_in(key, 1)            # fresh binding, fresh stream
+    y = jax.random.normal(k, ())
+    return x, y
+
+
+def exclusive(key, flag):
+    k = jax.random.fold_in(key, 0)
+    if flag:
+        return jax.random.normal(k, (2,))
+    else:
+        return jax.random.uniform(k, (2,))    # other branch: no collision

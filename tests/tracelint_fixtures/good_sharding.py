@@ -1,0 +1,30 @@
+"""Known-good sharding: zero expected findings.
+
+Collectives and specs over the declared ("ac", "batch") axes, a
+multi-axis all_gather tuple, and an axis name carried by a *variable*
+(rule stays silent on non-literals — that's ``batch_axes``' job at
+runtime).
+"""
+import jax
+from jax.sharding import PartitionSpec as P
+
+MESH = jax.make_mesh((2, 4), ("ac", "batch"))
+
+
+def good_psum(x):
+    return jax.lax.psum(x, "ac")
+
+
+def good_gather(x):
+    return jax.lax.all_gather(x, ("ac", "batch"), tiled=True)
+
+
+def variable_axis(x, axes):
+    return jax.lax.psum(x, axes)              # non-literal: no opinion
+
+
+def good_spec(fn, x):
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=MESH,
+                     in_specs=(P("batch"),),
+                     out_specs=P(("ac", "batch")))(x)

@@ -1,0 +1,32 @@
+"""Known-bad: host transfers / syncs inside a hot-loop module.
+
+The directory path mimics ``repro/kernels/`` so ``is_hot`` classifies
+this file exactly like a real kernel module. Expected findings
+(asserted by tests/test_tracelint.py):
+
+  line 16  device_get          line 17  np.asarray
+  line 18  .item()             line 19  float()
+  line 20  block_until_ready   line 26  if-on-traced-value
+"""
+import jax
+import numpy as np
+
+
+def leak(x):
+    a = jax.device_get(x)
+    b = np.asarray(x)
+    c = x.item()
+    d = float(x)
+    jax.block_until_ready(x)
+    return a, b, c, d
+
+
+def scanned(carry, x):
+    # Python branch on a traced operand: bakes one side into the trace
+    if x > 0:
+        carry = carry + x
+    return carry, x
+
+
+def drive(xs):
+    return jax.lax.scan(scanned, 0.0, xs)

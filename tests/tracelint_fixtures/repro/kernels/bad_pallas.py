@@ -1,0 +1,57 @@
+"""Known-bad pallas_call hygiene — incl. the PR-3 silent-fallback shape.
+
+PR 3 fixed wrappers that pinned ``interpret`` at definition time, so a
+compiled-mode run silently executed the interpreter (or a jnp fallback)
+instead of the kernel. Expected findings:
+
+  line 21  hardcoded interpret=True (the PR-3 regression shape)
+  line 26  pallas_call without interpret=
+  line 37  interpret from an arbitrary expression
+  line 45  VMEM scratch over budget
+  line 55  block shape does not divide out shape
+"""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def hardcoded(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        interpret=True,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def missing(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+DEBUG = False
+
+
+def drifting(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        interpret=not DEBUG,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def fat_scratch(x, interpret=None):
+    from repro.kernels._compat import resolve_interpret
+    return pl.pallas_call(
+        lambda x_ref, o_ref, scratch: None,
+        scratch_shapes=[pltpu.VMEM((2048, 2048), jax.numpy.float32)],
+        interpret=resolve_interpret(interpret),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def ragged_blocks(x, interpret=None):
+    from repro.kernels._compat import resolve_interpret
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(4,),
+        out_specs=pl.BlockSpec((48, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((100, 128), jax.numpy.float32),
+        interpret=resolve_interpret(interpret))(x)

@@ -1,0 +1,30 @@
+"""Known-good twin of bad_host_transfer.py: zero expected findings.
+
+Device-resident math, ``float`` of a literal, branching on Python-level
+config (not a traced operand), a host sync excused with a reason, and a
+host helper OUTSIDE any traced function whose ``if`` is ordinary
+Python.
+"""
+import jax
+import jax.numpy as jnp
+
+SCALE = float(2)                    # literal: no device value involved
+
+
+def scanned(carry, x):
+    carry = carry + jnp.where(x > 0, x, 0.0)   # traced branch, lax-style
+    return carry, x
+
+
+def drive(xs, debug=False):
+    out = jax.lax.scan(scanned, 0.0, xs)
+    if debug:                       # `debug` is not a param of `scanned`
+        # tracelint: allow[host-transfer] -- debug-only barrier behind a flag
+        jax.block_until_ready(out)
+    return out
+
+
+def host_side(n):
+    if n > 3:                       # not inside any traced function
+        return n * SCALE
+    return n

@@ -1,0 +1,35 @@
+"""Known-good pallas_call hygiene: zero expected findings.
+
+The repo idiom: ``interpret`` threaded through ``_compat`` at every
+call site, VMEM scratch inside the budget, block shapes dividing the
+out shape exactly.
+"""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import interpret_default, resolve_interpret
+
+
+def threaded(x, interpret=None):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        interpret=resolve_interpret(interpret),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def defaulted(x):
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        interpret=interpret_default(),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def tiled(x, interpret=None):
+    return pl.pallas_call(
+        lambda x_ref, o_ref, scratch: None,
+        grid=(4,),
+        scratch_shapes=[pltpu.VMEM((128, 128), jax.numpy.float32)],
+        out_specs=pl.BlockSpec((32, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((128, 128), jax.numpy.float32),
+        interpret=resolve_interpret(interpret))(x)
