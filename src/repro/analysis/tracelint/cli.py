@@ -45,8 +45,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                      require_contract=not args.no_contract)
     baseline = args.baseline or None
     try:
-        findings, stale, modules = engine.run(paths, cfg=cfg,
-                                              baseline_path=baseline)
+        # write mode regenerates from the FULL finding list — filtering
+        # through the old baseline first would drop every still-valid
+        # entry (and its curated reason) from the rewritten file
+        findings, stale, modules = engine.run(
+            paths, cfg=cfg,
+            baseline_path=None if args.write_baseline else baseline)
     except (SyntaxError, ValueError) as e:
         print(f"tracelint: {e}", file=sys.stderr)
         return 2
@@ -56,7 +60,14 @@ def main(argv: Optional[List[str]] = None) -> int:
             print("tracelint: --write-baseline needs --baseline",
                   file=sys.stderr)
             return 2
-        engine.write_baseline(baseline, findings, modules, args.reason)
+        try:
+            existing = engine.load_baseline(baseline)
+        except ValueError as e:
+            print(f"tracelint: rewriting malformed baseline ({e})",
+                  file=sys.stderr)
+            existing = []
+        engine.write_baseline(baseline, findings, modules, args.reason,
+                              existing=existing)
         print(f"tracelint: wrote {len(findings)} entr"
               f"{'y' if len(findings) == 1 else 'ies'} to {baseline}")
         return 0

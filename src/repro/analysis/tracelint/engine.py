@@ -76,6 +76,15 @@ def parse_suppressions(mod: LintModule):
     """-> {line: (rules frozenset, reason|None)}. A suppression on a
     comment-only line also covers the next source line."""
     out: Dict[int, Tuple[frozenset, Optional[str]]] = {}
+
+    def add(line: int, rules: frozenset, reason: Optional[str]) -> None:
+        # a comment-line suppression and the next line's own suppression
+        # both target that line: union the rule sets, never overwrite
+        if line in out:
+            prev_rules, prev_reason = out[line]
+            rules, reason = prev_rules | rules, prev_reason or reason
+        out[line] = (rules, reason)
+
     for i, text in enumerate(mod.lines, start=1):
         m = _SUPPRESS_RE.search(text)
         if not m:
@@ -83,9 +92,9 @@ def parse_suppressions(mod: LintModule):
         rules = frozenset(r.strip() for r in m.group(1).split(",")
                           if r.strip())
         reason = m.group(2).strip() if m.group(2) else None
-        out[i] = (rules, reason)
+        add(i, rules, reason)
         if text.strip().startswith("#"):      # comment-only: covers next line
-            out[i + 1] = (rules, reason)
+            add(i + 1, rules, reason)
     return out
 
 
@@ -154,7 +163,14 @@ def load_baseline(path: str) -> List[BaselineEntry]:
 
 
 def write_baseline(path: str, findings: Sequence[Finding],
-                   modules: Dict[str, LintModule], reason: str) -> None:
+                   modules: Dict[str, LintModule], reason: str,
+                   existing: Sequence[BaselineEntry] = ()) -> None:
+    """``findings`` must come from an UN-baselined run (``run`` with
+    ``baseline_path=None``) — writing a baseline-filtered list would drop
+    every still-valid entry. ``existing`` entries whose pinned line is
+    unchanged keep their curated reason; everything else gets ``reason``.
+    """
+    reasons = {(e.rule, e.path, e.line, e.src): e.reason for e in existing}
     with open(path, "w") as f:
         f.write("# tracelint baseline — each entry excuses ONE finding "
                 "at a pinned source line.\n"
@@ -164,8 +180,10 @@ def write_baseline(path: str, findings: Sequence[Finding],
         for fd in sorted(findings):
             mod = modules.get(fd.path)
             src = mod.src(fd.line) if mod else ""
-            f.write(BaselineEntry(fd.rule, fd.path, fd.line, reason,
-                                  src).format() + "\n")
+            f.write(BaselineEntry(
+                fd.rule, fd.path, fd.line,
+                reasons.get((fd.rule, fd.path, fd.line, src), reason),
+                src).format() + "\n")
 
 
 def check_baseline(entries: Sequence[BaselineEntry],

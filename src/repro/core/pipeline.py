@@ -628,10 +628,13 @@ class SpreezeTrainer:
         guard-free."""
         if not self.cfg.sanitize:
             return contextlib.nullcontext()
-        stack = contextlib.ExitStack()
-        stack.enter_context(jax.transfer_guard("disallow"))
-        stack.enter_context(jax.debug_nans(True))
-        return stack
+        # build under a with so a failing enter_context unwinds the
+        # already-entered transfer_guard instead of leaking it process-wide;
+        # pop_all hands the fully-built stack to the caller's with
+        with contextlib.ExitStack() as stack:
+            stack.enter_context(jax.transfer_guard("disallow"))
+            stack.enter_context(jax.debug_nans(True))
+            return stack.pop_all()
 
     def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
               target_return: Optional[float] = None,

@@ -30,6 +30,20 @@ def test_sanitize_scope_installs_guard():
     assert not _guard_live()        # scoped: nothing leaks past the with
 
 
+def test_sanitize_scope_failure_unwinds_guard(monkeypatch):
+    """If building the scope fails partway through, the already-entered
+    transfer_guard is unwound instead of leaking process-wide."""
+    tr = SpreezeTrainer(_cfg(sanitize=True))
+
+    def boom(_on):
+        raise RuntimeError("debug_nans unavailable")
+
+    monkeypatch.setattr(jax, "debug_nans", boom)
+    with pytest.raises(RuntimeError, match="debug_nans unavailable"):
+        tr._sanitize_scope()
+    assert not _guard_live()
+
+
 def test_sanitize_scope_noop_when_off():
     tr = SpreezeTrainer(_cfg())
     with tr._sanitize_scope():

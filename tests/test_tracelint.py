@@ -108,6 +108,20 @@ def test_inline_allow_with_reason_suppresses(tmp_path):
     assert _findings(str(f)) == []
 
 
+def test_adjacent_suppressions_merge(tmp_path):
+    """A comment-line suppression and the covered line's own inline
+    suppression union their rule sets — neither clobbers the other."""
+    f = tmp_path / "repro" / "kernels" / "hot.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""\
+        import jax
+        def g(x):
+            # tracelint: allow[host-transfer] -- measured handoff
+            return jax.device_get(x)  # tracelint: allow[prng-reuse] -- future-proofing an unrelated rule
+    """))
+    assert _findings(str(f)) == []
+
+
 def test_allow_wrong_rule_does_not_suppress(tmp_path):
     f = tmp_path / "repro" / "kernels" / "hot.py"
     f.parent.mkdir(parents=True)
@@ -146,6 +160,33 @@ def test_baseline_roundtrip_and_staleness(tmp_path):
                                     baseline_path=str(baseline))
     assert len(stale) == 1 and "stale" in stale[0]
     assert [fd.line for fd in findings] == [3]   # and the finding is back
+
+
+def test_write_baseline_preserves_valid_entries(tmp_path):
+    """Regenerating with --write-baseline keeps still-valid entries and
+    their curated reasons; only genuinely new findings get --reason."""
+    a = tmp_path / "a.py"
+    a.write_text("import jax\njax.config.update('jax_enable_x64', True)\n")
+    baseline = tmp_path / "baseline.txt"
+    assert cli_main([str(a), "--baseline", str(baseline), "--no-contract",
+                     "--write-baseline",
+                     "--reason", "curated: a is known debt"]) == 0
+
+    # a second offending file appears; regenerate after triage
+    b = tmp_path / "b.py"
+    b.write_text("import jax\njax.config.update('jax_disable_jit', True)\n")
+    assert cli_main([str(a), str(b), "--baseline", str(baseline),
+                     "--no-contract", "--write-baseline",
+                     "--reason", "new debt"]) == 0
+
+    entries = engine.load_baseline(str(baseline))
+    by_file = {e.path.rsplit("/", 1)[-1]: e for e in entries}
+    assert set(by_file) == {"a.py", "b.py"}
+    assert by_file["a.py"].reason == "curated: a is known debt"
+    assert by_file["b.py"].reason == "new debt"
+    # and the regenerated baseline keeps both files clean, nothing stale
+    assert cli_main([str(a), str(b), "--baseline", str(baseline),
+                     "--no-contract"]) == 0
 
 
 def test_baseline_rejects_malformed(tmp_path):
