@@ -21,11 +21,9 @@ from __future__ import annotations
 import argparse
 import glob
 import json
-import math
 import os
 import subprocess
 import sys
-from collections import Counter
 from typing import Dict, List
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -119,14 +117,14 @@ def megastep_report(out: str) -> bool:
     # the PER-minus-uniform collective delta: every shape the PER path
     # ADDS must be sub-capacity (candidate merges are (groups*batch,),
     # weight combines (batch/groups, 1), the rest scalars) — a
-    # capacity-sized entry here means selection went global again
-    def key(s):
-        return (s[0], tuple(s[1]))
-    delta = Counter(map(key, per["collective_shapes"]))
-    delta.subtract(Counter(map(key, base["collective_shapes"])))
-    added = [(kind, list(dims)) for (kind, dims), c in delta.items()
-             if c > 0 for _ in range(c)]
-    offenders = [s for s in added if math.prod(s[1]) >= capacity]
+    # capacity-sized entry here means selection went global again.
+    # Since PR 8 the predicate is the shared hlolint analyzer
+    # (checks.shape_delta / capacity_offenders) — the same code that
+    # enforces the standing megastep_sharded_per contract.
+    from repro.analysis.hlolint import checks
+    added = checks.shape_delta(per["collective_shapes"],
+                               base["collective_shapes"])
+    offenders = checks.capacity_offenders(added, capacity)
     groups = mesh.shape["batch"]
     ok = (not offenders
           and per["trace_counts"].get("shard:per_topk", 0) > 0)

@@ -1,0 +1,16 @@
+"""hlolint: compiled-artifact contract checker (PR 8).
+
+Tracelint (``repro.analysis.tracelint``) guards the *source*; hlolint
+guards the *compiled artifact*: it lowers/compiles every declared
+jitted hot entrypoint and checks machine-readable contracts against the
+jaxpr + HLO — donation effectiveness, collective budgets, dtype
+discipline, host-callback bans, recompile churn. See docs/analysis.md.
+
+Usage: ``python -m repro.analysis.hlolint`` (exit 0 clean / 1 findings
+/ 2 broken contracts, matching tracelint).
+"""
+from repro.analysis.hlolint.contract import (  # noqa: F401
+    CollectiveContract,
+    CollectiveRule,
+    EntrypointContract,
+)

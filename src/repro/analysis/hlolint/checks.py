@@ -1,0 +1,282 @@
+"""hlolint rule families: pure checks over one entrypoint's artifacts.
+
+Each ``check_*`` takes (contract, artifact data) and returns findings —
+no jax imports at module scope, so the checks are unit-testable against
+canned HLO text (tests/test_hlolint.py). ``run_contract`` is the
+harness that lowers/compiles a declared entrypoint via its builder and
+feeds the five checks; ``capacity_offenders``/``shape_delta`` are the
+shared helpers ``benchmarks/roofline.py --megastep`` routes its PR-4
+capacity assertion through.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.hlolint import hlo
+from repro.analysis.hlolint.contract import (
+    BANNED_DTYPES,
+    EntrypointContract,
+)
+
+#: HLO float dtypes subject to the per-entrypoint ``float_dtypes`` set
+#: (integer/pred types are unconstrained by default — loop counters and
+#: index math are free to be whatever XLA picks)
+_FLOAT_DTYPES = ("f8e4m3fn", "f8e5m2", "bf16", "f16", "f32", "f64")
+
+#: jaxpr primitives that reach back to the host
+_HOST_PRIMITIVES = ("pure_callback", "io_callback", "debug_callback",
+                    "callback", "infeed", "outfeed")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    entrypoint: str      # contract name (module:name printed by the CLI)
+    rule: str
+    msg: str
+
+    def format(self) -> str:
+        return f"{self.entrypoint}: [{self.rule}] {self.msg}"
+
+
+# --------------------------------------------------------------------------- #
+# rule family 1: donation effectiveness
+# --------------------------------------------------------------------------- #
+
+def check_donation(contract: EntrypointContract, hlo_text: str,
+                   donated_leaves: int,
+                   donation_warnings: Sequence[str]) -> List[Finding]:
+    """Donated buffers must actually alias: zero "donated buffers were
+    not usable" warnings at lower time, and the compiled
+    ``input_output_alias`` table must cover >= ``min_aliased_fraction``
+    of the donated flat leaves. The count-based fraction (not bytes) is
+    sharding-invariant; it tolerates ``keep_unused=False`` dropping a
+    couple of unused leaves when the contract lowers the fraction."""
+    if not contract.donates:
+        return []
+    out: List[Finding] = []
+    for w in donation_warnings:
+        out.append(Finding(contract.name, "donation",
+                           f"donation warning at lower time: {w.strip()}"))
+    aliased = hlo.input_aliased_params(hlo_text)
+    if donated_leaves <= 0:
+        out.append(Finding(contract.name, "donation",
+                           "contract declares donates=True but the builder "
+                           "reported 0 donated leaves"))
+        return out
+    frac = min(len(aliased) / donated_leaves, 1.0)
+    if frac < contract.min_aliased_fraction:
+        out.append(Finding(
+            contract.name, "donation",
+            f"only {len(aliased)}/{donated_leaves} donated input leaves "
+            f"are aliased in the compiled artifact "
+            f"({frac:.2f} < min_aliased_fraction "
+            f"{contract.min_aliased_fraction:.2f}) — the un-aliased "
+            f"buffers are silently copied every dispatch"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule family 2: collective budget
+# --------------------------------------------------------------------------- #
+
+def check_collectives(contract: EntrypointContract, hlo_text: str,
+                      params: Dict[str, int]) -> List[Finding]:
+    shapes = hlo.collective_result_shapes(hlo_text)
+    try:
+        bad = contract.collectives.check(shapes, params)
+    except ValueError as e:          # broken dim expression in the contract
+        return [Finding(contract.name, "contract-error", str(e))]
+    return [Finding(contract.name, "collective",
+                    f"{kind} result {'x'.join(map(str, shape)) or 'scalar'} "
+                    f"off-budget: {why}")
+            for kind, shape, why in bad]
+
+
+def capacity_offenders(shapes: Sequence[Tuple[str, Sequence[int]]],
+                       capacity: int) -> List[Tuple[str, List[int]]]:
+    """The roofline's PR-4 predicate, shared: collective result shapes
+    whose element count is >= the replay capacity (a capacity-sized
+    collective on the PER path means selection went global again)."""
+    return [(kind, list(dims)) for kind, dims in shapes
+            if math.prod(dims) >= capacity]
+
+
+def shape_delta(per: Sequence[Tuple[str, Sequence[int]]],
+                base: Sequence[Tuple[str, Sequence[int]]]
+                ) -> List[Tuple[str, List[int]]]:
+    """Multiset difference per - base of (kind, dims) censuses: the
+    collectives one arm ADDS over another, with multiplicity."""
+    from collections import Counter
+
+    def key(s):
+        return (s[0], tuple(s[1]))
+    delta = Counter(map(key, per))
+    delta.subtract(Counter(map(key, base)))
+    return [(kind, list(dims)) for (kind, dims), c in delta.items()
+            if c > 0 for _ in range(c)]
+
+
+# --------------------------------------------------------------------------- #
+# rule family 3: dtype discipline
+# --------------------------------------------------------------------------- #
+
+def check_dtypes(contract: EntrypointContract,
+                 hlo_text: str) -> List[Finding]:
+    census = hlo.dtype_census(hlo_text)
+    out: List[Finding] = []
+    for dt in BANNED_DTYPES:
+        if census.get(dt):
+            out.append(Finding(
+                contract.name, "dtype",
+                f"{dt} appears {census[dt]}x in the compiled artifact — "
+                f"banned repo-wide (silent upcast doubles HBM traffic)"))
+    allowed = set(contract.float_dtypes)
+    for dt in _FLOAT_DTYPES:
+        if dt in BANNED_DTYPES or dt in allowed:
+            continue
+        if census.get(dt):
+            out.append(Finding(
+                contract.name, "dtype",
+                f"{dt} appears {census[dt]}x but the contract declares "
+                f"float_dtypes={tuple(sorted(allowed))}"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# rule family 4: host-callback / infeed ban
+# --------------------------------------------------------------------------- #
+
+def check_host_ops(contract: EntrypointContract, hlo_text: str,
+                   jaxpr_prims: Sequence[str] = ()) -> List[Finding]:
+    if not contract.hot:
+        return []
+    out: List[Finding] = []
+    for op in hlo.host_ops(hlo_text):
+        out.append(Finding(
+            contract.name, "host-callback",
+            f"host-boundary op {op} in the compiled artifact of a hot "
+            f"entrypoint — every dispatch stalls on the host"))
+    hit_prims = sorted({p for p in jaxpr_prims
+                        if any(h in p for h in _HOST_PRIMITIVES)})
+    for p in hit_prims:
+        out.append(Finding(
+            contract.name, "host-callback",
+            f"host-callback primitive '{p}' in the jaxpr of a hot "
+            f"entrypoint"))
+    return out
+
+
+def jaxpr_primitives(jaxpr) -> List[str]:
+    """Recursively collect primitive names from a (Closed)Jaxpr —
+    duck-typed so no jax import is needed here."""
+    names: List[str] = []
+    seen = set()
+
+    def visit(j):
+        if id(j) in seen:
+            return
+        seen.add(id(j))
+        if hasattr(j, "jaxpr"):               # ClosedJaxpr
+            visit(j.jaxpr)
+            return
+        for eqn in getattr(j, "eqns", ()):
+            names.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                        visit(sub)
+    visit(jaxpr)
+    return names
+
+
+# --------------------------------------------------------------------------- #
+# rule family 5: recompile churn
+# --------------------------------------------------------------------------- #
+
+def check_retrace(contract: EntrypointContract, jitted,
+                  drive: Optional[Callable[[int], None]]) -> List[Finding]:
+    """Drive ``drive_dispatches`` representative dispatches through the
+    builder's protocol and read the dispatch cache: more entries than
+    ``max_retraces`` means the entrypoint re-traces in the steady state
+    (shape/dtype wobble or weak-type churn) — the silent throughput
+    killer tracelint cannot see from source."""
+    if drive is None:
+        return []
+    drive(contract.drive_dispatches)
+    try:
+        n = jitted._cache_size()
+    except Exception:                # jit wrapper without a cache probe
+        return []
+    if n > contract.max_retraces:
+        return [Finding(
+            contract.name, "retrace",
+            f"{n} traces after {contract.drive_dispatches} representative "
+            f"dispatches (contract allows {contract.max_retraces}) — "
+            f"the entrypoint recompiles in the steady state")]
+    return []
+
+
+# --------------------------------------------------------------------------- #
+# harness: run one contract end to end
+# --------------------------------------------------------------------------- #
+
+def run_contract(contract: EntrypointContract,
+                 builder: Callable[[], Dict]
+                 ) -> Tuple[List[Finding], Optional[str]]:
+    """Build, lower, compile, and check one declared entrypoint.
+
+    ``builder() -> dict`` with keys:
+
+    * ``fn``: the jitted callable (fresh — its dispatch cache must start
+      empty for the retrace probe);
+    * ``args``: representative example arguments;
+    * ``params``: symbol table for the contract's dim expressions;
+    * ``donated_leaves``: flat leaf count of the donated arguments;
+    * ``drive`` (optional): ``drive(n)`` performs n representative
+      dispatches, threading donated outputs back as inputs.
+
+    -> (findings, skipped_reason). A skip (too few devices) is not a
+    finding — the forced-8-device CI job covers sharded entrypoints.
+    """
+    import jax
+
+    if len(jax.devices()) < contract.min_devices:
+        return [], (f"needs >= {contract.min_devices} devices, "
+                    f"host has {len(jax.devices())}")
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            built = builder()
+            jitted, args = built["fn"], built["args"]
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        donation_warnings = [str(w.message) for w in caught
+                             if "donated" in str(w.message).lower()]
+        hlo_text = compiled.as_text()
+    except Exception as e:           # builder/lowering broke: contract error
+        return [Finding(contract.name, "contract-error",
+                        f"builder failed: {type(e).__name__}: {e}")], None
+
+    prims: List[str] = []
+    try:                             # AOT trace API (jax >= 0.4.31)
+        prims = jaxpr_primitives(jitted.trace(*args).jaxpr)
+    except Exception:
+        pass
+
+    findings: List[Finding] = []
+    findings += check_donation(contract, hlo_text,
+                               built.get("donated_leaves", 0),
+                               donation_warnings)
+    findings += check_collectives(contract, hlo_text,
+                                  built.get("params", {}))
+    findings += check_dtypes(contract, hlo_text)
+    findings += check_host_ops(contract, hlo_text, prims)
+    try:
+        findings += check_retrace(contract, jitted, built.get("drive"))
+    except Exception as e:
+        findings.append(Finding(contract.name, "contract-error",
+                                f"drive failed: {type(e).__name__}: {e}"))
+    return sorted(findings), None

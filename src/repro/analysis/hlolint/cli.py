@@ -1,0 +1,132 @@
+"""``python -m repro.analysis.hlolint`` — check every declared contract.
+
+Exit codes (matching tracelint):
+
+* 0 — every contract holds and every donated jit site is covered
+* 1 — contract violations (donation/collective/dtype/host-callback/
+      retrace) or uncovered donated jit sites
+* 2 — the contracts themselves are broken (unknown entrypoint name,
+      builder crash, malformed dim expression) — never silently pass a
+      run whose checks didn't actually execute
+
+Sharded contracts (``min_devices > 8-devices-than-the-host-has``) are
+reported as skips, not findings: the default CI job checks the
+single-device entrypoints and the forced-8-device job
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) covers the
+rest. ``--fixtures FILE`` swaps in a corpus module (its
+``HLOLINT_CONTRACTS``/``BUILDERS``) and coverage-scans that file
+instead of src/ — the self-test that proves every rule family fires.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.hlolint import coverage, entrypoints
+from repro.analysis.hlolint.checks import Finding, run_contract
+
+
+def _load_fixture_module(path: str):
+    spec = importlib.util.spec_from_file_location("hlolint_fixtures", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def load_suite(fixtures: Optional[str] = None
+               ) -> Tuple[List, Dict, List[str], List[Finding]]:
+    """-> (contracts, builders, coverage_files, load_errors)."""
+    errors: List[Finding] = []
+    if fixtures:
+        mod = _load_fixture_module(fixtures)
+        contracts = list(getattr(mod, "HLOLINT_CONTRACTS", ()))
+        builders = dict(getattr(mod, "BUILDERS", {}))
+        files = [fixtures]
+    else:
+        contracts = entrypoints.collect_contracts()
+        builders = entrypoints.BUILDERS
+        files = []
+    seen = set()
+    for c in contracts:
+        if c.name in seen:
+            errors.append(Finding(c.name, "contract-error",
+                                  f"duplicate contract name in {c.module}"))
+        seen.add(c.name)
+        if c.name not in builders:
+            errors.append(Finding(c.name, "contract-error",
+                                  "no builder registered for this contract"))
+    return contracts, builders, files, errors
+
+
+def run(root: str = "src", fixtures: Optional[str] = None,
+        only: Optional[Sequence[str]] = None, quiet: bool = False
+        ) -> Tuple[List[Finding], List[str]]:
+    """-> (findings, skip notes)."""
+    contracts, builders, files, findings = load_suite(fixtures)
+    known = [c.name for c in contracts]
+    findings += coverage.scan_tree(root, known, files=files)
+    skips: List[str] = []
+    for c in contracts:
+        if only and c.name not in only:
+            continue
+        if c.name not in builders:
+            continue                      # already a contract-error above
+        if not quiet:
+            print(f"[hlolint] checking {c.site()} ...", flush=True)
+        found, skip = run_contract(c, builders[c.name])
+        if skip:
+            skips.append(f"{c.site()}: skipped — {skip}")
+        findings.extend(found)
+    return sorted(set(findings)), skips
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.hlolint",
+        description="compiled-artifact contract checker (donation, "
+                    "collectives, dtype, host-callback, retrace)")
+    ap.add_argument("--root", default="src",
+                    help="tree to scan for uncovered donated jit sites "
+                         "(default: src)")
+    ap.add_argument("--fixtures", default=None,
+                    help="path to a fixture corpus module providing "
+                         "HLOLINT_CONTRACTS + BUILDERS (self-test mode)")
+    ap.add_argument("--only", action="append", default=None,
+                    help="check only this contract (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list declared contracts and exit")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        contracts, builders, _files, errors = load_suite(args.fixtures)
+        for c in contracts:
+            extra = "" if c.name in builders else "  [NO BUILDER]"
+            print(f"{c.site()}  (min_devices={c.min_devices}){extra}")
+        for e in errors:
+            print(e.format())
+        return 2 if errors else 0
+
+    findings, skips = run(root=args.root, fixtures=args.fixtures,
+                          only=args.only, quiet=args.quiet)
+    for s in skips:
+        print(f"[hlolint] {s}")
+    for f in findings:
+        print(f.format())
+    broken = [f for f in findings if f.rule == "contract-error"]
+    n_checked = len(findings)
+    if broken:
+        print(f"[hlolint] {len(broken)} broken contract(s) — fix the "
+              f"contract/builder, the checks did not run")
+        return 2
+    if findings:
+        print(f"[hlolint] {n_checked} finding(s)")
+        return 1
+    print(f"[hlolint] clean ({len(skips)} skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

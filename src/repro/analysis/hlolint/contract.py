@@ -1,0 +1,178 @@
+"""hlolint contract declarations (dependency-free leaf module).
+
+Contracts are **machine-readable claims about the compiled artifact**,
+declared next to the jit sites they govern (``core/pipeline.py``,
+``kernels/ops.py``, ``train/trainer.py``, ``serve/engine.py``,
+``replay/buffer.py``) so the person editing a hot entrypoint edits its
+contract in the same diff. ``python -m repro.analysis.hlolint`` lowers
+and compiles each declared entrypoint and checks five rule families
+against the jaxpr + HLO (see ``checks.py``); builders that produce the
+representative (function, args) pairs live in ``entrypoints.py``.
+
+This module must import nothing heavy: the hot modules import it at
+module scope, so anything beyond stdlib dataclasses here would tax
+every trainer import.
+
+**Shape expressions.** Collective result shapes in the compiled
+(per-partition) HLO depend on run parameters (replay capacity, batch
+size, mesh group count...), so contracts express dims symbolically:
+each dim is an arithmetic expression over the builder-supplied symbol
+table (``"groups*k"``, ``"batch//groups"``), ``"*"`` matches any one
+dim, and a trailing ``"..."`` matches any remaining dims.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+#: rule-family ids, mirrored by the CLI summary and the fixture tests
+RULES = (
+    "donation",        # donated buffers actually aliased in the artifact
+    "collective",      # collective result shapes within the declared budget
+    "dtype",           # no f64 anywhere; float dtypes from the declared set
+    "host-callback",   # no host callbacks / infeed / outfeed in hot code
+    "retrace",         # dispatch-cache churn within the declared budget
+    "coverage",        # every donated jit site carries a contract
+    "contract-error",  # the contract itself is broken (exit 2)
+)
+
+#: float/complex dtypes that are banned from every artifact regardless of
+#: the per-entrypoint ``float_dtypes`` declaration: a single f64 upcast
+#: doubles HBM bytes on the whole downstream chain.
+BANNED_DTYPES = ("f64", "c64", "c128")
+
+_EXPR_RE = re.compile(r"^[\sa-zA-Z_0-9+\-*/()%]+$")
+
+
+def eval_dim(expr: str, params: Dict[str, int]) -> int:
+    """Evaluate one dim expression over the builder's symbol table.
+
+    Supports ints, identifiers from ``params``, ``+ - * // / %`` and
+    parentheses — enough for ``"groups*k"`` / ``"batch//groups"``
+    without admitting arbitrary code."""
+    if not _EXPR_RE.match(expr):
+        raise ValueError(f"bad dim expression {expr!r}")
+    try:
+        val = eval(expr, {"__builtins__": {}}, dict(params))  # noqa: S307
+    except NameError as e:
+        raise ValueError(f"dim expression {expr!r}: {e}") from None
+    ival = int(val)
+    if ival != val:
+        raise ValueError(f"dim expression {expr!r} is not integral "
+                         f"({val}) — use // for division")
+    return ival
+
+
+@dataclass(frozen=True)
+class CollectiveRule:
+    """One allowed collective result shape.
+
+    ``kind`` is the HLO base op (``all-gather``, ``all-reduce``,
+    ``reduce-scatter``, ``all-to-all``, ``collective-permute``,
+    ``collective-broadcast``) or ``"*"``. ``dims`` entries are dim
+    expressions, ``"*"`` (any one dim), or a trailing ``"..."``.
+
+    ``cap_exempt`` lifts the contract's ``max_elems`` cap for shapes
+    this rule matches — for traffic whose size is structurally
+    unrelated to the capped quantity (e.g. param-shaped grad
+    all-reduces vs a replay-capacity cap). Keep exempt rules as
+    shape-specific as possible: an exempt wildcard is a hole in the
+    cap."""
+    kind: str
+    dims: Tuple[str, ...]
+    cap_exempt: bool = False
+
+    def matches(self, kind: str, shape: Sequence[int],
+                params: Dict[str, int]) -> bool:
+        if self.kind != "*" and kind != self.kind:
+            return False
+        dims = list(self.dims)
+        tail = dims and dims[-1] == "..."
+        if tail:
+            dims = dims[:-1]
+        if tail:
+            if len(shape) < len(dims):
+                return False
+        elif len(shape) != len(dims):
+            return False
+        for want, got in zip(dims, shape):
+            if want == "*":
+                continue
+            if eval_dim(want, params) != got:
+                return False
+        return True
+
+
+@dataclass(frozen=True)
+class CollectiveContract:
+    """Per-entrypoint collective budget over the compiled HLO.
+
+    A collective result shape passes iff it matches an ``allow`` rule
+    (rank-0 results — scalar reductions — always pass), AND its element
+    count stays below ``max_elems`` (an expression, typically
+    ``"capacity"``: nothing the interconnect carries may be
+    proportional to the replay-pool capacity — the roofline's PR-4
+    assertion as a standing contract) unless the matching rule is
+    ``cap_exempt``. ``max_elems=None`` disables the cap."""
+    allow: Tuple[CollectiveRule, ...] = ()
+    max_elems: Optional[str] = None
+
+    def check(self, shapes: Sequence[Tuple[str, Tuple[int, ...]]],
+              params: Dict[str, int]):
+        """-> list of (kind, shape, why) violations."""
+        bad = []
+        cap = (eval_dim(self.max_elems, params)
+               if self.max_elems is not None else None)
+        for kind, shape in shapes:
+            rule = next((r for r in self.allow
+                         if shape and r.matches(kind, shape, params)), None)
+            if not shape:
+                continue                 # scalar reduction: always allowed
+            if rule is None:
+                bad.append((kind, shape, "matches no allow rule"))
+                continue
+            elems = math.prod(shape)
+            if cap is not None and elems >= cap and not rule.cap_exempt:
+                bad.append((kind, shape,
+                            f"result has {elems} elems >= max_elems "
+                            f"{self.max_elems}={cap}"))
+        return bad
+
+
+@dataclass(frozen=True)
+class EntrypointContract:
+    """The compiled-artifact contract for one jitted hot entrypoint.
+
+    ``name`` keys the builder in ``entrypoints.BUILDERS`` (or the
+    fixture module's ``BUILDERS``) and the ``# hlolint:
+    entrypoint[name]`` coverage annotation at the jit site.
+    ``min_devices`` gates sharded entrypoints: on smaller hosts they are
+    reported as skipped, and the forced-8-device CI job covers them."""
+    name: str
+    module: str                               # dotted module of the jit site
+    # donation-effectiveness: fraction (by flat input count and by bytes
+    # on single-partition artifacts) of donated buffers that must appear
+    # in the compiled ``input_output_alias`` table; donation warnings at
+    # lower time must be zero regardless.
+    donates: bool = False
+    min_aliased_fraction: float = 1.0
+    # collective budget (None with min_devices == 1 means "no
+    # collectives at all may appear")
+    collectives: CollectiveContract = field(
+        default_factory=CollectiveContract)
+    # dtype discipline: float dtypes the compiled program may contain
+    # (HLO names); BANNED_DTYPES are rejected even if listed here.
+    float_dtypes: Tuple[str, ...] = ("f32",)
+    # host-callback/infeed ban (the compiled twin of tracelint's
+    # host-transfer rule); opt out only for explicitly host-side paths.
+    hot: bool = True
+    # recompile churn: max distinct traces after the builder's drive
+    # protocol performs its representative dispatches
+    max_retraces: int = 1
+    drive_dispatches: int = 3
+    min_devices: int = 1
+
+    def site(self) -> str:
+        return f"{self.module}:{self.name}"

@@ -1,0 +1,124 @@
+"""Coverage rule: every donated jit site in src/ carries a contract.
+
+The point of hlolint dies the day someone adds a new
+``jax.jit(..., donate_argnums=...)`` hot entrypoint without a contract —
+so this AST scan (the compiled-artifact twin of tracelint's
+donation-reuse source rule) walks ``src/`` for donated jit sites and
+requires each to carry, on the call line or the line above, either::
+
+    # hlolint: entrypoint[name, ...]     (names must exist in the registry)
+    # hlolint: exempt -- <why no contract is needed>
+
+Exempts require a reason (``launch/dryrun.py``'s sites are
+lowering-only — they never dispatch, so there is no artifact to guard).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Sequence, Tuple
+
+from repro.analysis.hlolint.checks import Finding
+
+_ANNOT_RE = re.compile(
+    r"#\s*hlolint:\s*(?:entrypoint\[([\w,\s\-]+)\]|(exempt))"
+    r"\s*(?:--\s*(\S.*))?")
+
+
+def _dotted(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _is_donating_jit(call: ast.Call) -> bool:
+    """jax.jit(..., donate_argnums=...) — directly or through
+    functools.partial(jax.jit, donate_argnums=...)."""
+    fn = _dotted(call.func)
+    has_donate = any(kw.arg == "donate_argnums" and
+                     not (isinstance(kw.value, ast.Constant)
+                          and kw.value.value is None)
+                     for kw in call.keywords)
+    if not has_donate:
+        return False
+    if fn.endswith("jit"):
+        return True
+    if fn.endswith("partial") and call.args:
+        return _dotted(call.args[0]).endswith("jit")
+    return False
+
+
+def donated_jit_sites(tree: ast.AST) -> List[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call) and _is_donating_jit(n)]
+
+
+def scan_file(path: str, rel: str,
+              known_names: Sequence[str]) -> List[Finding]:
+    with open(path) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(rel, "contract-error", f"cannot parse: {e}")]
+    lines = src.splitlines()
+    out: List[Finding] = []
+    for call in donated_jit_sites(tree):
+        loc = f"{rel}:{call.lineno}"
+        m = None
+        for ln in (call.lineno, call.lineno - 1):
+            if 1 <= ln <= len(lines):
+                m = _ANNOT_RE.search(lines[ln - 1])
+                if m:
+                    break
+        if m is None:
+            out.append(Finding(
+                loc, "coverage",
+                "donated jit site without an hlolint contract — annotate "
+                "'# hlolint: entrypoint[<name>]' (and declare the "
+                "contract) or '# hlolint: exempt -- <reason>'"))
+            continue
+        if m.group(2):                                  # exempt
+            if not m.group(3):
+                out.append(Finding(
+                    loc, "coverage",
+                    "hlolint exempt without a reason — append "
+                    "'-- <why this site needs no contract>'"))
+            continue
+        names = [n.strip() for n in m.group(1).split(",") if n.strip()]
+        if not names:
+            out.append(Finding(loc, "coverage",
+                               "empty hlolint entrypoint[] annotation"))
+        for name in names:
+            if name not in known_names:
+                out.append(Finding(
+                    loc, "contract-error",
+                    f"annotation names entrypoint '{name}' but no such "
+                    f"contract is declared in any CONTRACT_MODULES "
+                    f"module"))
+    return out
+
+
+def scan_tree(root: str, known_names: Sequence[str],
+              files: Iterable[str] = ()) -> List[Finding]:
+    """Scan every .py under ``root`` (or just ``files``) for
+    uncontracted donated jit sites."""
+    targets: List[Tuple[str, str]] = []
+    if files:
+        targets = [(f, os.path.relpath(f).replace(os.sep, "/"))
+                   for f in files]
+    else:
+        for dirpath, _dirs, names in os.walk(root):
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    fp = os.path.join(dirpath, n)
+                    targets.append(
+                        (fp, os.path.relpath(fp).replace(os.sep, "/")))
+    out: List[Finding] = []
+    for fp, rel in targets:
+        out.extend(scan_file(fp, rel, known_names))
+    return sorted(out)

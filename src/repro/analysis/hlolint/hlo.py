@@ -1,0 +1,221 @@
+"""Shared HLO-text parsing: collective censuses, dtype census, alias
+table, callback/infeed scan.
+
+This is the single home of the repo's HLO parsing (PR 8): the
+collective-bytes/-shapes parsers moved here from ``launch/analysis.py``
+(which re-exports them for back-compat), so the roofline bench, the
+dry-run analysis, and the hlolint contract checks all read the compiled
+artifact through one code path.
+
+Parsing conventions (preserved from the roofline's PR-4 parser, and
+covered by ``tests/test_analysis.py``):
+
+* Result-side lines only: ``%name = TYPE op(...)`` with an optional
+  ``ROOT`` prefix.
+* Async pairs count once — ``*-done`` lines are skipped, and a
+  ``*-start`` whose result is the XLA (operand, destination, ...) tuple
+  drops its FIRST array: for the common pair that removes exactly the
+  aliased operand, while a combined multi-operand start errs toward
+  keeping extra arrays rather than hiding a destination from the
+  capacity assertions built on these censuses.
+* Per-partition view: compiled sharded modules report LOCAL shapes, so
+  every census here is per-chip.
+
+PR-8 hardening over the original parser:
+
+* dynamic/bounded dims (``f32[<=8]``, ``s32[<=2,3]``) now parse —
+  the old ``[0-9,]*`` charset silently skipped the whole array, hiding
+  it from the capacity assertion; bounded dims use their bound.
+* ``collective-broadcast`` joined the collective census.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+# one HLO array type, e.g. bf16[16,256,960]{2,1,0}; dims may be bounded
+# dynamic ("<=8") — use the bound (conservative for byte/capacity sums)
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[((?:<=)?[0-9]*(?:,(?:<=)?[0-9]+)*)\]")
+
+# "name = TYPE op(..." — the shared result-side line parser for the
+# collective censuses below. Optional ROOT prefix (a collective that is
+# a computation root must still be counted); the lazy TYPE group admits
+# nested tuple types like "((f32[2]{0}), (f32[2]{0}))" — safe because
+# HLO type text never contains " word(" before the op name.
+_COLLECTIVE_LINE_RE = re.compile(
+    r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)\(")
+
+
+def _parse_dims(dims: str) -> Tuple[int, ...]:
+    return tuple(int(d.lstrip("<=")) for d in dims.split(",") if d)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, per collective kind.
+
+    Result bytes ~ data received per device per op execution; ops inside
+    while loops (the layer scan) execute L times — the scan trip count is
+    applied by the caller via ``scan_multiplier`` when known. Async
+    pairs count once — ``*-done`` skipped, and a tuple-result
+    ``*-start`` drops its FIRST array (the aliased operand): for the
+    common (operand, destination) pair that leaves exactly the
+    destination; for combined multi-operand starts it deliberately
+    over-counts (keeps the extra operands) rather than hide a
+    destination — conservative for the capacity assertions built on
+    these censuses.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        # result side: "%name = TYPE all-gather(...)" (also fusions wrapping)
+        m = _COLLECTIVE_LINE_RE.match(line.strip())
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        for base in _COLLECTIVES:
+            if op.startswith(base):
+                arrays = [tm.group(0) for tm in _TYPE_RE.finditer(m.group(1))
+                          if tm.group(1) in _DTYPE_BYTES]
+                if op.endswith("-start") and len(arrays) > 1:
+                    arrays = arrays[1:]
+                out[base] += sum(_type_bytes(a) for a in arrays)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def collective_result_shapes(hlo_text: str
+                             ) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Every collective op's (kind, result dims) in the HLO text, one
+    entry per result array. The shape-level sibling of
+    ``collective_bytes``: lets a bench or an hlolint contract assert
+    *what* crosses the interconnect, not just how much — e.g. that a
+    replay path adds no collective whose result is proportional to the
+    pool capacity. Async pairs count once: ``*-done`` lines are
+    skipped, and a ``*-start`` whose result is the XLA (operand,
+    destination, ...) tuple drops its FIRST array — for the common pair
+    that removes exactly the aliased operand (which would misreport
+    e.g. a sub-capacity reduce-scatter over a capacity-sized operand as
+    a capacity-sized transfer), while a combined multi-operand start
+    errs toward keeping extra arrays rather than hiding a destination
+    from the capacity assertion."""
+    out: List[Tuple[str, Tuple[int, ...]]] = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.match(line.strip())
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        for base in _COLLECTIVES:
+            if op.startswith(base):
+                shapes = [_parse_dims(tm.group(2))
+                          for tm in _TYPE_RE.finditer(m.group(1))
+                          if tm.group(1) in _DTYPE_BYTES]
+                if op.endswith("-start") and len(shapes) > 1:
+                    shapes = shapes[1:]
+                out.extend((base, s) for s in shapes)
+                break
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> int:
+    """Best-effort: largest while-loop trip count (the layer scan), used to
+    scale per-iteration collective bytes."""
+    best = 1
+    for m in re.finditer(r"trip_count=(\d+)", hlo_text):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+# --------------------------------------------------------------------------- #
+# hlolint-specific artifact reads (PR 8)
+# --------------------------------------------------------------------------- #
+
+# one entry of the module-header alias table
+# "input_output_alias={ {0}: (0, {}, may-alias), ... }":
+# {output index}: (param number, {param index}, kind). The entry shape
+# is distinctive enough to scan without delimiting the enclosing table
+# (whose braces nest, defeating a simple regex) — but only on lines
+# that carry the marker, to be safe.
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{[\d,\s]*\}:\s*\((\d+),\s*\{[\d,\s]*\}(?:,\s*(may-alias|must-alias))?\)")
+
+
+def input_aliased_params(hlo_text: str) -> List[int]:
+    """Flat parameter indices that the compiled module aliases to an
+    output (``may-alias`` and ``must-alias`` both count — donation
+    succeeded either way). Parsed from the entry-module header's
+    ``input_output_alias={ {out}: (param, {index}, kind), ... }``."""
+    idx: List[int] = []
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        tail = line.split("input_output_alias=", 1)[1]
+        for e in _ALIAS_ENTRY_RE.finditer(tail):
+            idx.append(int(e.group(1)))
+    return sorted(set(idx))
+
+
+def dtype_census(hlo_text: str) -> Dict[str, int]:
+    """{dtype: occurrence count} over every array type in the module —
+    the input to the dtype-discipline check. Counts type *mentions*
+    (cheap, stable), not unique buffers."""
+    out: Dict[str, int] = {}
+    for m in _TYPE_RE.finditer(hlo_text):
+        dt = m.group(1)
+        if dt in _DTYPE_BYTES:
+            out[dt] = out.get(dt, 0) + 1
+    return out
+
+
+#: custom-call targets that reach back to the host (CPU/GPU python
+#: callbacks and the TPU-side host-command variants)
+_CALLBACK_TARGETS = ("xla_python_cpu_callback", "xla_python_gpu_callback",
+                     "xla_ffi_python_cpu_callback",
+                     "xla_ffi_python_gpu_callback", "tpu_host_command")
+
+_HOST_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*(infeed|outfeed|send|send-done|recv|recv-done)\(")
+
+
+def host_ops(hlo_text: str) -> List[str]:
+    """Host-boundary ops in the compiled module: python-callback
+    custom-calls plus infeed/outfeed/send/recv. Anything here inside a
+    hot entrypoint stalls the dispatch pipeline on the host."""
+    hits: List[str] = []
+    for line in hlo_text.splitlines():
+        if "custom_call_target=" in line:
+            for tgt in _CALLBACK_TARGETS:
+                if f'custom_call_target="{tgt}"' in line:
+                    hits.append(f"custom-call:{tgt}")
+        m = _HOST_OP_RE.search(line)
+        if m and not m.group(1).endswith("-done"):
+            hits.append(m.group(1))
+    return hits

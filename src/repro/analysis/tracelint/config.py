@@ -18,15 +18,20 @@ from typing import Tuple
 # posix path suffixes (files) or infixes (directories).
 HOT_MODULES: Tuple[str, ...] = (
     "repro/core/pipeline.py",     # megastep + train loop dispatch path
+    "repro/core/runtime.py",      # async host runtime: its publish path
+                                  # runs between dispatches — a sync
+                                  # there stalls the train loop (PR 8)
     "repro/train/trainer.py",     # LM train_step loop (timed rounds)
     "repro/kernels/",             # Pallas kernels + wrappers
     "repro/replay/",              # ring buffer / PER (traced by megastep)
+    "repro/serve/engine.py",      # decode loop (per-token dispatch, PR 8)
 )
 
 # Host-side modules where transfers/syncs are by design; they override
 # HOT_MODULES (e.g. replay/host_queue.py IS the host-transfer baseline).
+# NOTE: core/runtime.py left this list in PR 8 — only its *worker*
+# threads may sync, and those sites carry inline allows with reasons.
 HOST_ALLOW: Tuple[str, ...] = (
-    "repro/core/runtime.py",      # async eval/viz workers (own threads)
     "repro/train/checkpoint.py",  # SSD weight channel
     "repro/replay/host_queue.py", # Fig. 4a host-queue ablation
     "repro/launch/",              # entry points, dryrun analysis

@@ -78,6 +78,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.hlolint.contract import (CollectiveContract,
+                                             CollectiveRule,
+                                             EntrypointContract)
 from repro.core import model_parallel as mp
 from repro.core import runtime as rt
 from repro.core.transfer import make_transfer
@@ -87,6 +90,58 @@ from repro.envs import base as env_base
 from repro.replay import buffer as rb
 from repro.rl.base import AlgoHP, get_algo
 from repro.train import checkpoint
+
+# --------------------------------------------------------------------------- #
+# hlolint contracts (checked by `python -m repro.analysis.hlolint`)
+# --------------------------------------------------------------------------- #
+# Machine-readable claims about the COMPILED megastep family — builders
+# that instantiate them live in repro.analysis.hlolint.entrypoints.
+# Dims are expressions over the probe's symbol table (capacity, batch,
+# groups, k == batch for the trainer's PER draw).
+
+#: sharded megastep wire budget, uniform replay: ring-gather
+#: reduce-scatters plus grad/param reductions over the ac ensemble.
+#: `max_elems="capacity"` is the PR-4 roofline assertion as a standing
+#: contract — nothing on the wire may be replay-capacity-sized.
+MEGASTEP_COLLECTIVE_CONTRACT = CollectiveContract(
+    allow=kops.RING_GATHER_COLLECTIVES + (
+        # rank>=2 all-reduces are param-shaped grad/target syncs over
+        # the ac axis — structurally unrelated to the replay capacity,
+        # so they skip the cap (rank-1 reductions stay capped: a
+        # (capacity,) all-reduce would be a PER-globalization bug)
+        CollectiveRule("all-reduce", ("*", "*", "..."), cap_exempt=True),
+        CollectiveRule("all-reduce", ("*",)),
+        # batch-sized index/weight broadcasts between the shard_map ops
+        CollectiveRule("all-gather", ("batch",)),
+    ),
+    max_elems="capacity")
+
+#: PER adds exactly the group-local top-k candidate merge
+PER_MEGASTEP_COLLECTIVE_CONTRACT = CollectiveContract(
+    allow=MEGASTEP_COLLECTIVE_CONTRACT.allow + kops.PER_TOPK_COLLECTIVES,
+    max_elems="capacity")
+
+HLOLINT_CONTRACTS = (
+    # single-device fused megasteps: donation must fully alias (the
+    # replay pool re-materializing every dispatch would double HBM and
+    # stall the pipeline), no collectives at all, f32 end to end
+    EntrypointContract(name="megastep", module=__name__, donates=True),
+    EntrypointContract(name="megastep_per", module=__name__, donates=True),
+    # sharded arms: the first dispatch sees freshly-initialized inputs
+    # with unconstrained placements; once the megastep's explicitly
+    # sharded outputs thread back in, jit commits one more trace and
+    # then stays stable — hence 2, not 1 (measured, not slack)
+    EntrypointContract(name="megastep_sharded", module=__name__,
+                      donates=True, min_devices=8, max_retraces=2,
+                      collectives=MEGASTEP_COLLECTIVE_CONTRACT),
+    EntrypointContract(name="megastep_sharded_per", module=__name__,
+                      donates=True, min_devices=8, max_retraces=2,
+                      collectives=PER_MEGASTEP_COLLECTIVE_CONTRACT),
+    EntrypointContract(name="sampler_chunk", module=__name__,
+                      donates=True),
+    EntrypointContract(name="update_round", module=__name__,
+                      donates=True),
+)
 
 
 @dataclass
@@ -475,6 +530,7 @@ class SpreezeTrainer:
                 return state, replay, env_states, key, metrics
 
             if rules is None:
+                # hlolint: entrypoint[megastep, megastep_per]
                 return jax.jit(pinned(megastep), donate_argnums=(0, 1, 2))
 
             def sharded_megastep(state, replay, env_states, key):
@@ -491,6 +547,7 @@ class SpreezeTrainer:
                     self.state.actor, rules)
             in_sh = (self._state_sharding, self._replay_sharding,
                      self._env_sharding, rep)
+            # hlolint: entrypoint[megastep_sharded, megastep_sharded_per]
             return jax.jit(sharded_megastep, donate_argnums=(0, 1, 2),
                            in_shardings=in_sh,
                            out_shardings=in_sh + (metrics_sh,))
@@ -501,7 +558,9 @@ class SpreezeTrainer:
             self._env_sharding = mp.replicated_sharding(self.env_states,
                                                         rules)
         self._viz = jax.jit(viz_episode)
+        # hlolint: entrypoint[sampler_chunk]
         self._sampler = jax.jit(pinned(sampler_chunk), donate_argnums=(1,))
+        # hlolint: entrypoint[update_round]
         self._update_round = jax.jit(pinned(update_round),
                                      donate_argnums=(0, 1))
         self._eval = jax.jit(eval_batch)

@@ -270,6 +270,7 @@ class HostRuntime:
             self._route_locked(snap)
 
     def _handle_eval(self, snap: Snapshot) -> None:
+        # tracelint: allow[host-transfer] -- worker-thread conversion: the whole point of the async runtime is that this sync happens OFF the train loop's dispatch thread
         ret = float(self._eval_fn(snap.actor, snap.eval_key))
         if self._hist is not None:
             self._hist.record_eval(snap.t, ret, snap.frames, snap.steps,

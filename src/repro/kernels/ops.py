@@ -28,6 +28,9 @@ import jax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.hlolint.contract import (CollectiveContract,
+                                             CollectiveRule,
+                                             EntrypointContract)
 from repro.distributed.sharding import (MeshRules, batch_axes,
                                         batch_group_index)
 from repro.kernels import decode_attention as _dec
@@ -134,6 +137,35 @@ def per_topk(priorities, gumbel, alpha: float, k: int):
 # --------------------------------------------------------------------------- #
 # replay ring: shard_map wrappers over the ("ac","batch") trainer mesh
 # --------------------------------------------------------------------------- #
+
+# hlolint COLLECTIVE_CONTRACT fragments: the wire budget of each sharded
+# wrapper, declared next to the ops that emit the traffic. The megastep
+# contract in core/pipeline.py composes these — dims are expressions
+# over the probe's symbol table (capacity/batch/groups/k), and the
+# invariant they encode is PR-4's: replay traffic is NEVER
+# capacity-proportional.
+RING_GATHER_COLLECTIVES = (
+    # psum_scatter hands each group its (batch//groups) slice of the
+    # summed partial gathers (trailing dims = the row payload)
+    CollectiveRule("reduce-scatter", ("batch//groups", "...")),
+)
+PER_TOPK_COLLECTIVES = (
+    # the (groups*k,) candidate merge — the ONLY cross-group PER traffic
+    # (score and index gathers, one all-gather each)
+    CollectiveRule("all-gather", ("groups*k",)),
+)
+
+HLOLINT_CONTRACTS = (
+    EntrypointContract(
+        name="per_topk_sharded", module=__name__, min_devices=8,
+        collectives=CollectiveContract(allow=PER_TOPK_COLLECTIVES,
+                                       max_elems="capacity")),
+    EntrypointContract(
+        name="ring_gather_sharded", module=__name__, min_devices=8,
+        collectives=CollectiveContract(allow=RING_GATHER_COLLECTIVES,
+                                       max_elems="capacity")),
+)
+
 
 def _row_spec(rules: MeshRules, ndim: int) -> P:
     """(rows, ...) leaf: rows over the batch axes, rest replicated."""

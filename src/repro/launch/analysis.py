@@ -11,38 +11,36 @@ compiled artifact, not from wall time (this container is CPU-only):
 GSPMD, so its flops/bytes are NOT divided by the chip count again; the
 collective bytes are parsed per-partition from the HLO text, so they are
 likewise per-chip. (Verified empirically in tests/test_analysis.py.)
+
+As of PR 8 the HLO-text parsing itself lives in
+``repro.analysis.hlolint.hlo`` — the single parser shared by this
+roofline surface and the hlolint contract checks — and is re-exported
+here unchanged for existing callers (``benchmarks/roofline.py``,
+``tests/test_analysis.py``).
 """
 from __future__ import annotations
 
-import re
-from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import asdict, dataclass
+from typing import Dict
+
+# Shared HLO parsing (moved to repro.analysis.hlolint.hlo in PR 8;
+# re-exported here for back-compat — the private names too, since the
+# parser tests exercise them).
+from repro.analysis.hlolint.hlo import (  # noqa: F401
+    _COLLECTIVE_LINE_RE,
+    _COLLECTIVES,
+    _DTYPE_BYTES,
+    _TYPE_RE,
+    _type_bytes,
+    collective_bytes,
+    collective_result_shapes,
+    scan_trip_counts,
+)
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-# one HLO array type, e.g. bf16[16,256,960]{2,1,0}
-_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-# "name = TYPE op(..." — the shared result-side line parser for the
-# collective censuses below. Optional ROOT prefix (a collective that is
-# a computation root must still be counted); the lazy TYPE group admits
-# nested tuple types like "((f32[2]{0}), (f32[2]{0}))" — safe because
-# HLO type text never contains " word(" before the op name.
-_COLLECTIVE_LINE_RE = re.compile(
-    r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)\(")
 
 
 def cost_dict(compiled) -> Dict:
@@ -53,101 +51,6 @@ def cost_dict(compiled) -> Dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _TYPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum result-shape bytes of every collective op, per collective kind.
-
-    Result bytes ~ data received per device per op execution; ops inside
-    while loops (the layer scan) execute L times — the scan trip count is
-    applied by the caller via ``scan_multiplier`` when known. Async
-    pairs count once — ``*-done`` skipped, and a tuple-result
-    ``*-start`` drops its FIRST array (the aliased operand): for the
-    common (operand, destination) pair that leaves exactly the
-    destination; for combined multi-operand starts it deliberately
-    over-counts (keeps the extra operands) rather than hide a
-    destination — conservative for the capacity assertions built on
-    these censuses.
-    """
-    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
-    out["count"] = 0
-    for line in hlo_text.splitlines():
-        # result side: "%name = TYPE all-gather(...)" (also fusions wrapping)
-        m = _COLLECTIVE_LINE_RE.match(line.strip())
-        if not m:
-            continue
-        op = m.group(2)
-        if op.endswith("-done"):
-            continue
-        for base in _COLLECTIVES:
-            if op.startswith(base):
-                arrays = [tm.group(0) for tm in _TYPE_RE.finditer(m.group(1))
-                          if tm.group(1) in _DTYPE_BYTES]
-                if op.endswith("-start") and len(arrays) > 1:
-                    arrays = arrays[1:]
-                out[base] += sum(_type_bytes(a) for a in arrays)
-                out["count"] += 1
-                break
-    out["total"] = sum(out[k] for k in _COLLECTIVES)
-    return out
-
-
-def collective_result_shapes(hlo_text: str
-                             ) -> List[Tuple[str, Tuple[int, ...]]]:
-    """Every collective op's (kind, result dims) in the HLO text, one
-    entry per result array. The shape-level sibling of
-    ``collective_bytes``: lets a bench assert *what* crosses the
-    interconnect, not just how much — e.g. that a replay path adds no
-    collective whose result is proportional to the pool capacity
-    (``benchmarks/roofline.py``). Async pairs count once: ``*-done``
-    lines are skipped, and a ``*-start`` whose result is the XLA
-    (operand, destination, ...) tuple drops its FIRST array — for the
-    common pair that removes exactly the aliased operand (which would
-    misreport e.g. a sub-capacity reduce-scatter over a capacity-sized
-    operand as a capacity-sized transfer), while a combined
-    multi-operand start errs toward keeping extra arrays rather than
-    hiding a destination from the capacity assertion."""
-    out: List[Tuple[str, Tuple[int, ...]]] = []
-    for line in hlo_text.splitlines():
-        m = _COLLECTIVE_LINE_RE.match(line.strip())
-        if not m:
-            continue
-        op = m.group(2)
-        if op.endswith("-done"):
-            continue
-        for base in _COLLECTIVES:
-            if op.startswith(base):
-                shapes = [tuple(int(d) for d in tm.group(2).split(",") if d)
-                          for tm in _TYPE_RE.finditer(m.group(1))
-                          if tm.group(1) in _DTYPE_BYTES]
-                if op.endswith("-start") and len(shapes) > 1:
-                    shapes = shapes[1:]
-                out.extend((base, s) for s in shapes)
-                break
-    return out
-
-
-def scan_trip_counts(hlo_text: str) -> int:
-    """Best-effort: largest while-loop trip count (the layer scan), used to
-    scale per-iteration collective bytes."""
-    best = 1
-    for m in re.finditer(r"trip_count=(\d+)", hlo_text):
-        best = max(best, int(m.group(1)))
-    return best
 
 
 @dataclass

@@ -18,8 +18,17 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlolint.contract import EntrypointContract
 from repro.distributed.sharding import current_rules, shard
 from repro.kernels import ops as kops
+
+# hlolint contract for the donated ring write: the in-place HBM
+# scatter IS the paper's shared-memory pool — if donation stops
+# aliasing, every add copies the whole (capacity, ...) ring
+HLOLINT_CONTRACTS = (
+    EntrypointContract(name="replay_add_batch", module=__name__,
+                       donates=True),
+)
 
 
 def _ring_mode(cap_rows: int, sample_rows=None) -> str:
@@ -171,6 +180,7 @@ def _pallas_keyed_jit(fn):
     identity + avals and cannot see our contextvars, so distinct jit
     wrappers around the same ``fn`` would still share one trace."""
     return functools.lru_cache(maxsize=None)(
+        # hlolint: entrypoint[replay_add_batch]
         lambda key: functools.partial(jax.jit, donate_argnums=(0,))(
             functools.wraps(fn)(lambda *a, **kw: fn(*a, **kw))))
 

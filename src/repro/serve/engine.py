@@ -14,9 +14,18 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlolint.contract import EntrypointContract
 from repro.configs.base import InputShape, ModelConfig, RunConfig
 from repro.models import factory
 from repro.train.trainer import dtype_of
+
+# hlolint contract for the donated decode step: the KV cache must alias
+# in place (a non-donated cache copies O(cache) bytes per token) and the
+# artifact stays on the f32/bf16 serving policy
+HLOLINT_CONTRACTS = (
+    EntrypointContract(name="serve_decode_step", module=__name__,
+                       donates=True, float_dtypes=("f32", "bf16")),
+)
 
 
 def make_prefill_step(rc: RunConfig, seq_len: int) -> Callable:
@@ -46,6 +55,7 @@ def greedy_generate(rc: RunConfig, params, batch: Dict[str, jax.Array],
     cfg = rc.model
     total = prompt_len + num_tokens
     prefill_step = jax.jit(make_prefill_step(rc, total))
+    # hlolint: entrypoint[serve_decode_step]
     decode_step = jax.jit(make_decode_step(rc), donate_argnums=(2,))
 
     cache, logits = prefill_step(params, batch)

@@ -12,9 +12,18 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlolint.contract import EntrypointContract
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import factory
 from repro.train.optimizer import Optimizer, make_optimizer
+
+# hlolint contract for the donated LM train step (the probe compiles a
+# reduced dense arch with the default f32-params/bf16-compute policy —
+# an f64 or a stray f16 in the artifact is a precision-policy leak)
+HLOLINT_CONTRACTS = (
+    EntrypointContract(name="lm_train_step", module=__name__,
+                       donates=True, float_dtypes=("f32", "bf16")),
+)
 
 
 def dtype_of(name: str):
@@ -63,6 +72,7 @@ def train_loop(rc: RunConfig, batches, *, steps: int, key=None,
     """Simple synchronous LM training loop over an iterable of batches."""
     key = key if key is not None else jax.random.PRNGKey(0)
     params, opt_state, opt = init_train_state(rc, key)
+    # hlolint: entrypoint[lm_train_step]
     step_fn = jax.jit(make_train_step(rc, opt), donate_argnums=(0, 1))
     losses = []
     t0 = None

@@ -1,0 +1,135 @@
+"""hlolint fixture corpus: one known-violating entrypoint per rule
+family plus a clean control.
+
+``python -m repro.analysis.hlolint --fixtures tests/hlolint_fixtures/fixtures.py``
+must report EXACTLY the violations asserted in tests/test_hlolint.py —
+this corpus is the proof that every rule family actually fires (and the
+coverage scan runs over this file, so the deliberately bare donated jit
+site at the bottom is the coverage fixture).
+
+The collective fixture needs >= 8 host devices (the test re-execs with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); everything
+else runs single-device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlolint.contract import (CollectiveContract,
+                                             CollectiveRule,
+                                             EntrypointContract)
+
+HLOLINT_CONTRACTS = (
+    # control: donated elementwise update, aliases fully, f32, quiet
+    EntrypointContract(name="good_entry", module=__name__, donates=True),
+    # the seeded undonated-buffer fixture: output shape can't alias the
+    # donated input -> lower-time warning + 0/1 aliased leaves
+    EntrypointContract(name="bad_donation", module=__name__, donates=True),
+    # computes in f16 against an f32-only contract
+    EntrypointContract(name="bad_dtype", module=__name__),
+    # jax.pure_callback inside a hot entrypoint
+    EntrypointContract(name="bad_callback", module=__name__),
+    # drive changes the input shape every dispatch -> 3 traces
+    EntrypointContract(name="bad_retrace", module=__name__),
+    # all-gathers the full capacity-sized vector; the allow rule matches
+    # but the max_elems="capacity" cap rejects it (the PR-4 bug class)
+    EntrypointContract(
+        name="bad_collective", module=__name__, min_devices=8,
+        collectives=CollectiveContract(
+            allow=(CollectiveRule("all-gather", ("capacity",)),),
+            max_elems="capacity")),
+)
+
+
+def _good_entry():
+    # hlolint: entrypoint[good_entry]
+    fn = jax.jit(lambda x: x * 2.0 + 1.0, donate_argnums=(0,))
+
+    def drive(n: int) -> None:
+        for _ in range(n):
+            fn(jnp.ones((16,)))
+
+    return {"fn": fn, "args": (jnp.ones((16,)),), "params": {},
+            "donated_leaves": 1, "drive": drive}
+
+
+def _bad_donation():
+    # donated (8,) input, (2,) output: XLA cannot alias -> warning
+    # hlolint: entrypoint[bad_donation]
+    fn = jax.jit(lambda x: x[:2] * 2.0, donate_argnums=(0,))
+
+    def drive(n: int) -> None:
+        for _ in range(n):
+            fn(jnp.ones((8,)))
+
+    return {"fn": fn, "args": (jnp.ones((8,)),), "params": {},
+            "donated_leaves": 1, "drive": drive}
+
+
+def _bad_dtype():
+    fn = jax.jit(lambda x: (x.astype(jnp.float16) * 2).astype(jnp.float32))
+    return {"fn": fn, "args": (jnp.ones((4,)),), "params": {},
+            "donated_leaves": 0}
+
+
+def _bad_callback():
+    def host_rng(x):
+        return x + jax.pure_callback(
+            lambda v: np.asarray(v, dtype=np.float32) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+
+    fn = jax.jit(host_rng)
+    return {"fn": fn, "args": (jnp.ones((4,)),), "params": {},
+            "donated_leaves": 0}
+
+
+def _bad_retrace():
+    fn = jax.jit(lambda x: x.sum())
+
+    def drive(n: int) -> None:
+        for i in range(n):
+            fn(jnp.ones((4 + i,)))       # new shape every dispatch
+
+    return {"fn": fn, "args": (jnp.ones((4,)),), "params": {},
+            "donated_leaves": 0, "drive": drive}
+
+
+def _bad_collective():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    cap = 1024
+    mesh = jax.make_mesh((8,), ("batch",))
+
+    def gather_all(x):
+        # the bug class the contract bans: materializing the FULL pool
+        # on every device
+        return shard_map(
+            lambda v: jax.lax.all_gather(v, "batch", axis=0, tiled=True),
+            mesh=mesh, in_specs=P("batch"), out_specs=P(),
+            check_rep=False)(x)
+
+    fn = jax.jit(gather_all)
+    return {"fn": fn, "args": (jnp.ones((cap,)),),
+            "params": {"capacity": cap}, "donated_leaves": 0}
+
+
+BUILDERS = {
+    "good_entry": _good_entry,
+    "bad_donation": _bad_donation,
+    "bad_dtype": _bad_dtype,
+    "bad_callback": _bad_callback,
+    "bad_retrace": _bad_retrace,
+    "bad_collective": _bad_collective,
+}
+
+
+def _uncovered(x):
+    """The coverage fixture: a donated jit site with no hlolint
+    annotation — the scan must flag the call line below."""
+    return functools.partial(jax.jit, donate_argnums=(0,))(
+        lambda v: v + 1.0)(x)

@@ -53,6 +53,37 @@ def test_collective_result_shapes():
     assert b["count"] == 5
 
 
+@pytest.mark.parametrize("kind", analysis._COLLECTIVES)
+def test_collective_shapes_every_kind(kind):
+    """PR-8 hardening regressions, parametrized per collective kind:
+    plain, ROOT-prefixed, and tuple-result lines all parse, including
+    ``collective-broadcast`` (previously missing from the census)."""
+    hlo = "\n".join([
+        f"  %p = f32[8,2]{{1,0}} {kind}(f32[8,2]{{1,0}} %x), dims={{0}}",
+        f"  ROOT %r = bf16[4]{{0}} {kind}(bf16[4]{{0}} %y)",
+        f"  %t = (f32[2]{{0}}, s32[2]{{0}}) {kind}(...), to_apply=%sum",
+    ])
+    got = analysis.collective_result_shapes(hlo)
+    assert got.count((kind, (8, 2))) == 1
+    assert got.count((kind, (4,))) == 1            # ROOT line counted
+    assert got.count((kind, (2,))) == 2            # both tuple arrays
+    b = analysis.collective_bytes(hlo)
+    assert b[kind] == 8 * 2 * 4 + 4 * 2 + 2 * 4 + 2 * 4
+    assert b["count"] == 3
+
+
+def test_collective_shapes_bounded_dynamic_dims():
+    """``f32[<=8]`` (bounded dynamic dims) used to fail the type regex,
+    silently dropping the array from byte AND capacity censuses; the
+    hardened parser uses the bound."""
+    assert analysis._type_bytes("f32[<=8]{0}") == 32
+    assert analysis._type_bytes("s32[<=2,3]{1,0}") == 24
+    hlo = "  %ag = f32[<=128]{0} all-gather(f32[<=16]{0} %x), dims={0}"
+    assert analysis.collective_result_shapes(hlo) == [("all-gather",
+                                                       (128,))]
+    assert analysis.collective_bytes(hlo)["all-gather"] == 128 * 4
+
+
 def test_extrapolate_linear():
     c1 = {"flops": 10.0, "bytes": 100.0, "coll": 1.0,
           "coll_breakdown": {"all-gather": 1.0}}
