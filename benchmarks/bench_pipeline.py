@@ -83,6 +83,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 
 from benchmarks.common import (child_pythonpath, emit,
                                xla_flags_force_devices)
@@ -171,13 +172,18 @@ def run_eval_overlap_arm(eval_mode: str, seconds: float, rpd: int,
     eval windows), "async" (host runtime + overlap_eval snapshots), or
     "inline" (the blocking pre-runtime path)."""
     assert eval_mode in ("off", "async", "inline")
+    # the async arm carries the PR-9 resilience layer at its defaults —
+    # supervision on AND the off-thread snapshot channel at the default
+    # cadence — so the Fig. 4b number is the number users actually get
+    snap_dir = (tempfile.mkdtemp(prefix="spreeze_snap_bench_")
+                if eval_mode == "async" else None)
     cfg = SpreezeConfig(
         env_name="pendulum", algo="sac", num_envs=1, batch_size=32,
         chunk_len=1, updates_per_round=1, warmup_frames=64,
         replay_capacity=4096, rounds_per_dispatch=rpd, fused=True,
         eval_every_rounds=(rpd if eval_mode != "off" else 0),
         eval_episodes=4, async_eval=(eval_mode == "async"),
-        overlap_eval=(eval_mode == "async"),
+        overlap_eval=(eval_mode == "async"), snapshot_dir=snap_dir,
         hp=AlgoHP(algo="sac", hidden=(32, 32)))
     tr = SpreezeTrainer(cfg)
     tr.train(max_seconds=0.01)
@@ -194,7 +200,9 @@ def run_eval_overlap_arm(eval_mode: str, seconds: float, rpd: int,
             "blocked_frac": round(
                 hist.eval_blocked_s / max(hist.wall_s, 1e-9), 4),
             "evals": len(hist.eval_returns),
-            "eval_dropped": int(hist.runtime_stats.get("eval_dropped", 0))}
+            "eval_dropped": int(hist.runtime_stats.get("eval_dropped", 0)),
+            "snapshots_written": int(
+                hist.runtime_stats.get("state_done", 0))}
 
 
 def main_eval_overlap(seconds: float = 2.0, rpd: int = 16, repeats: int = 3,

@@ -20,6 +20,7 @@ from typing import Callable, Dict, List
 #: modules that may declare module-level HLOLINT_CONTRACTS tuples
 CONTRACT_MODULES = (
     "repro.core.pipeline",
+    "repro.core.faults",
     "repro.kernels.ops",
     "repro.train.trainer",
     "repro.serve.engine",
@@ -205,6 +206,30 @@ def _ring_gather_sharded():
 
 
 # --------------------------------------------------------------------------- #
+# resilience layer
+# --------------------------------------------------------------------------- #
+
+def _finite_guard():
+    import jax
+    from repro.core import faults
+    from repro.train import resume as resume_lib
+
+    tr = _spreeze_trainer()
+    bundle = resume_lib.bundle_from(tr)
+    # a FRESH jit: the module-level ``faults.finite_guard`` cache may
+    # already hold traces over other structures from earlier work in
+    # this process, which would pollute the retrace probe
+    fn = jax.jit(faults.tree_finite)
+
+    def drive(n: int) -> None:
+        for _ in range(n):
+            jax.block_until_ready(fn(bundle))
+
+    return {"fn": fn, "args": (bundle,), "params": {},
+            "donated_leaves": 0, "drive": drive}
+
+
+# --------------------------------------------------------------------------- #
 # LM train / serve
 # --------------------------------------------------------------------------- #
 
@@ -284,6 +309,7 @@ BUILDERS: Dict[str, Callable[[], Dict]] = {
     "replay_add_batch": _replay_add_batch,
     "per_topk_sharded": _per_topk_sharded,
     "ring_gather_sharded": _ring_gather_sharded,
+    "finite_guard": _finite_guard,
     "lm_train_step": _lm_train_step,
     "serve_decode_step": _serve_decode_step,
 }

@@ -25,6 +25,9 @@ HOT_MODULES: Tuple[str, ...] = (
     "repro/kernels/",             # Pallas kernels + wrappers
     "repro/replay/",              # ring buffer / PER (traced by megastep)
     "repro/serve/engine.py",      # decode loop (per-token dispatch, PR 8)
+    "repro/core/faults.py",       # finite guard traced inside the
+                                  # megastep + train-thread injection
+                                  # points (must never sync, PR 9)
 )
 
 # Host-side modules where transfers/syncs are by design; they override
@@ -33,6 +36,9 @@ HOT_MODULES: Tuple[str, ...] = (
 # threads may sync, and those sites carry inline allows with reasons.
 HOST_ALLOW: Tuple[str, ...] = (
     "repro/train/checkpoint.py",  # SSD weight channel
+    "repro/train/resume.py",      # snapshot bundles: written on the
+                                  # async state worker / restored on
+                                  # the (blocking by design) resume path
     "repro/replay/host_queue.py", # Fig. 4a host-queue ablation
     "repro/launch/",              # entry points, dryrun analysis
     "repro/analysis/",            # this tool

@@ -1,12 +1,16 @@
 """Spreeze core: async pipeline + host runtime, AC model parallelism,
 adaptation, transfer."""
+from repro.core import faults
 from repro.core.adaptation import (auto_tune, tune_batch_size, tune_num_envs,
                                    tune_rounds_per_dispatch)
+from repro.core.faults import FaultPlan, FiniteGuardError, Preempted
 from repro.core.pipeline import SpreezeConfig, SpreezeTrainer, TrainHistory
-from repro.core.runtime import HostRuntime, Snapshot, SnapshotMailbox
+from repro.core.runtime import (HostRuntime, Snapshot, SnapshotMailbox,
+                                SupervisorPolicy)
 from repro.core.transfer import QueueTransfer, SharedTransfer, make_transfer
 
 __all__ = ["SpreezeConfig", "SpreezeTrainer", "TrainHistory", "auto_tune",
            "tune_batch_size", "tune_num_envs", "tune_rounds_per_dispatch",
            "QueueTransfer", "SharedTransfer", "make_transfer",
-           "HostRuntime", "Snapshot", "SnapshotMailbox"]
+           "HostRuntime", "Snapshot", "SnapshotMailbox", "SupervisorPolicy",
+           "faults", "FaultPlan", "FiniteGuardError", "Preempted"]

@@ -1,0 +1,189 @@
+"""Deterministic fault injection + the device-side finite guard.
+
+Spreeze's throughput comes from overlapping sampler/update/eval/viz/SSD
+"processes" (paper §3.1, Fig. 4), which multiplies the surface where one
+crashed or hung worker can take down a long run. The resilience layer
+(supervised workers in ``core.runtime``, preemption-safe resume in
+``train.resume``, rollback in ``core.pipeline``) is only trustworthy if
+its failure paths are *exercised* — so faults are injected from a
+declarative, round-indexed :class:`FaultPlan` and every injection is
+reproducible run-to-run (no wall-clock or RNG coupling).
+
+Injection points (all keyed by the train loop's round index):
+
+- **SSD write OSError** — the SSD weight channel's materialize raises a
+  transient ``OSError`` (the supervisor must retry and recover).
+- **Worker exception** — the eval worker raises; ``transient`` selects
+  the error class (``OSError`` retries/degrades, ``ValueError``
+  propagates — the error-taxonomy contract).
+- **Worker hang** — the eval worker sleeps through the heartbeat
+  timeout (the watchdog must replace it).
+- **Preemption** — a simulated SIGTERM between megastep dispatches:
+  the trainer snapshots full state and raises :class:`Preempted`.
+- **NaN round** — the actor is poisoned with a NaN between dispatches;
+  the megastep's ``carry_finite`` metric (a device-side reduction over
+  the carry, no host sync) must trip and the trainer roll back to the
+  last snapshot with an LR backoff.
+
+The finite guard itself lives here so the hot loop's only dependency is
+``tree_finite`` (traced inside the megastep over replicated leaves — it
+adds **no** collectives to the sharded artifact) and the standalone
+jitted ``finite_guard`` used to vet restored snapshot bundles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlolint.contract import EntrypointContract
+
+#: the standalone finite guard compiles per bundle structure; it is
+#: dispatched once per resume/rollback (never in the hot loop), carries
+#: no donation and no collectives.
+HLOLINT_CONTRACTS = (
+    EntrypointContract(name="finite_guard", module=__name__,
+                       donates=False),
+)
+
+
+class Preempted(RuntimeError):
+    """Simulated SIGTERM/preemption between megastep dispatches.
+
+    Carries the path of the snapshot written on the way out (plus the
+    round it covers) so the caller can hand it straight to
+    ``SpreezeTrainer.train(resume_from=...)``."""
+
+    def __init__(self, msg: str, *, snapshot_path: Optional[str] = None,
+                 round_i: int = 0):
+        super().__init__(msg)
+        self.snapshot_path = snapshot_path
+        self.round_i = round_i
+
+
+class FiniteGuardError(RuntimeError):
+    """The megastep carry went non-finite and recovery was impossible
+    (no snapshot to roll back to, or the rollback budget is spent)."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, reproducible fault schedule keyed by round index.
+
+    Rounds refer to the train loop's round counter at the matching
+    injection point; with the fused megastep the counter advances
+    ``rounds_per_dispatch`` per dispatch, so schedule rounds on window
+    boundaries (published eval/SSD rounds are window-aligned, and
+    ``preempt_round``/``nan_round`` fire at the first loop iteration
+    whose round index reaches them).
+
+    ``*_repeat`` controls how many times the injection re-fires at the
+    same round — the supervisor retries a failed snapshot, so
+    ``repeat=1`` exercises retry-and-recover while ``repeat >`` the
+    retry budget exercises degradation.
+    """
+    ssd_oserror_rounds: Tuple[int, ...] = ()   # SSD materialize raises
+    ssd_oserror_repeat: int = 1
+    eval_error_rounds: Tuple[int, ...] = ()    # eval worker raises
+    eval_error_repeat: int = 1
+    eval_error_transient: bool = True          # OSError vs ValueError
+    eval_hang_rounds: Tuple[int, ...] = ()     # eval worker sleeps
+    hang_seconds: float = 1.0
+    preempt_round: Optional[int] = None        # SIGTERM between dispatches
+    nan_round: Optional[int] = None            # poison one update round
+
+
+class FaultClock:
+    """Per-``train()`` consumption state for one :class:`FaultPlan`.
+
+    Each scheduled (point, round) fires at most ``repeat`` times even
+    when the supervisor retries the same snapshot or a rollback replays
+    the same rounds — without this, the NaN injection would re-poison
+    every replayed pass and the run could never converge back to
+    health."""
+
+    def __init__(self, plan: Optional[FaultPlan]):
+        self.plan = plan or FaultPlan()
+        self._fired: Dict[Tuple[str, int], int] = {}
+
+    def _consume(self, point: str, round_i: int, limit: int) -> bool:
+        n = self._fired.get((point, round_i), 0)
+        if n >= limit:
+            return False
+        self._fired[(point, round_i)] = n + 1
+        return True
+
+    # ---- worker-side injection points (called from worker threads; the
+    # dict mutation is safe under the runtime's handler serialization
+    # per consumer — one eval snapshot is claimed at a time per round)
+    def ssd_oserror(self, round_i: int) -> None:
+        p = self.plan
+        if (round_i in p.ssd_oserror_rounds
+                and self._consume("ssd", round_i, p.ssd_oserror_repeat)):
+            raise OSError(f"injected SSD write failure at round {round_i}")
+
+    def eval_fault(self, round_i: int) -> None:
+        p = self.plan
+        if (round_i in p.eval_error_rounds
+                and self._consume("eval", round_i, p.eval_error_repeat)):
+            if p.eval_error_transient:
+                raise OSError(f"injected transient eval failure at round "
+                              f"{round_i}")
+            raise ValueError(f"injected eval programming error at round "
+                             f"{round_i}")
+        if (round_i in p.eval_hang_rounds
+                and self._consume("hang", round_i, 1)):
+            time.sleep(p.hang_seconds)
+
+    # ---- train-thread injection points (between megastep dispatches)
+    def preempt(self, round_i: int) -> bool:
+        p = self.plan
+        return (p.preempt_round is not None and round_i >= p.preempt_round
+                and self._consume("preempt", p.preempt_round, 1))
+
+    def nan(self, round_i: int) -> bool:
+        p = self.plan
+        return (p.nan_round is not None and round_i >= p.nan_round
+                and self._consume("nan", p.nan_round, 1))
+
+
+# --------------------------------------------------------------------------- #
+# device-side finite guard
+# --------------------------------------------------------------------------- #
+
+def tree_finite(tree) -> jax.Array:
+    """Scalar bool: every inexact leaf of ``tree`` is finite.
+
+    Traced inside the fused megastep over the carry's *replicated*
+    leaves (actor params + the stacked round metrics), so on the
+    sharded megastep it lowers to purely local reductions — no new
+    collectives enter the artifact, and the result is polled on the
+    host without a sync (``jax.Array.is_ready``)."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.inexact):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+# standalone guard for vetting snapshot bundles at resume/rollback time
+# (one dispatch per restore — never on the hot loop)
+# hlolint: entrypoint[finite_guard]
+finite_guard = jax.jit(tree_finite)
+
+
+def poison_actor(actor):
+    """Return ``actor`` with a NaN written into its first floating
+    leaf — the deterministic "one update round goes non-finite"
+    injection. Pure device ops (no host round-trip): the poisoned tree
+    feeds the next megastep dispatch exactly like the live state."""
+    leaves, treedef = jax.tree.flatten(actor)
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.floating):
+            shape = jnp.shape(leaf)
+            leaves[i] = jnp.ravel(leaf).at[0].set(jnp.nan).reshape(shape)
+            break
+    return jax.tree.unflatten(treedef, leaves)

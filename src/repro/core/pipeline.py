@@ -65,12 +65,15 @@ without pinning the training state the next dispatch donates.
 from __future__ import annotations
 
 import bisect
+import collections
 import contextlib
+import dataclasses
 import functools
 import os
 import tempfile
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -81,6 +84,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlolint.contract import (CollectiveContract,
                                              CollectiveRule,
                                              EntrypointContract)
+from repro.core import faults
 from repro.core import model_parallel as mp
 from repro.core import runtime as rt
 from repro.core.transfer import make_transfer
@@ -90,6 +94,7 @@ from repro.envs import base as env_base
 from repro.replay import buffer as rb
 from repro.rl.base import AlgoHP, get_algo
 from repro.train import checkpoint
+from repro.train import resume as resume_lib
 
 # --------------------------------------------------------------------------- #
 # hlolint contracts (checked by `python -m repro.analysis.hlolint`)
@@ -201,6 +206,24 @@ class SpreezeConfig:
     # device-resident claim tracelint checks statically — CI's
     # forced-8-device job runs a smoke train() with this on.
     sanitize: bool = False
+    # resilience layer (docs/robustness.md): supervised workers,
+    # preemption-safe full-state snapshots, deterministic fault
+    # injection, and rollback on a non-finite megastep carry.
+    supervise: bool = True        # retry/degrade workers vs fail fast
+    worker_retry_budget: int = 3  # per-consumer crash/hang budget
+    worker_heartbeat_s: float = 30.0  # hung-worker watchdog (0 = off)
+    snapshot_dir: Optional[str] = None  # None = periodic snapshots off
+    snapshot_every_rounds: int = 50     # full-state snapshot cadence
+    # wall-clock floor between periodic snapshots: preemption safety
+    # bounds lost *time*, so on a fast probe (thousands of rounds/s) a
+    # pure round cadence would put the writer in a continuous loop and
+    # tax the train thread for durability nobody needs. 0 disables the
+    # floor (chaos tests pin snapshots to exact rounds).
+    snapshot_min_interval_s: float = 5.0
+    keep_snapshots: int = 3             # last-K retention
+    max_rollbacks: int = 3        # finite-guard rollback budget
+    rollback_lr_backoff: float = 0.5  # lr *= this on every rollback
+    fault_plan: Optional[faults.FaultPlan] = None  # injection schedule
     seed: int = 0
     hp: AlgoHP = field(default_factory=AlgoHP)
 
@@ -522,6 +545,14 @@ class SpreezeTrainer:
                                  (state, replay, env_states, key),
                                  None, length=rounds)
                 metrics = {"mean_rew": rews, "critic_loss": closs}
+                # device-side finite guard on the carry: actor params +
+                # the stacked round metrics (a NaN anywhere in the Q/env
+                # path reaches ``closs``/``rews`` within the same
+                # dispatch). Replicated leaves only, so the sharded
+                # artifact gains NO collectives; the host polls the
+                # result without a sync (jax.Array.is_ready).
+                metrics["carry_finite"] = faults.tree_finite(
+                    (state.actor, rews, closs))
                 if cfg.overlap_eval:
                     # fresh buffers eval can own: the next dispatch then
                     # donates ``state`` without waiting on eval
@@ -541,7 +572,8 @@ class SpreezeTrainer:
                     return megastep(state, replay, env_states, key)
 
             rep = NamedSharding(cfg.mesh, P())
-            metrics_sh = {"mean_rew": rep, "critic_loss": rep}
+            metrics_sh = {"mean_rew": rep, "critic_loss": rep,
+                          "carry_finite": rep}
             if cfg.overlap_eval:
                 metrics_sh["actor_snapshot"] = mp.replicated_sharding(
                     self.state.actor, rules)
@@ -580,9 +612,12 @@ class SpreezeTrainer:
             return self.last_metrics["actor_snapshot"]
         return jax.tree.map(jnp.copy, self.state.actor)
 
-    def _ssd_materialize(self, actor):
+    def _ssd_materialize(self, actor, round_i=None):
         """The paper's SSD weight channel: atomic write-then-rename
         ``.npz``, then read back — consumers never see a torn file."""
+        clock = getattr(self, "_fault_clock", None)
+        if clock is not None and round_i is not None:
+            clock.ssd_oserror(round_i)
         path = getattr(self, "_ssd_path", None)
         if path is None:
             d = tempfile.mkdtemp(prefix="spreeze_ssd_")
@@ -659,25 +694,43 @@ class SpreezeTrainer:
                      obs=np.asarray(obs), act=np.asarray(act_tr),
                      rew=np.asarray(rew))  # tracelint: allow[host-transfer] -- viz .npz dump (same site as above)
 
-    def _make_runtime(self, hist, target_return, log_cb):
+    def _eval_worker_fn(self, actor, round_i):
+        """Body of the async eval workers (and the fault-injection
+        point for "worker exception"/"worker hang" — the clock fires by
+        the snapshot's round index, so failures are reproducible)."""
+        clock = getattr(self, "_fault_clock", None)
+        if clock is not None:
+            clock.eval_fault(round_i)
+        # tracelint: allow[host-transfer] -- conversion runs on the async eval worker thread, not the train thread
+        return float(self._eval(
+            actor, jax.random.fold_in(self._eval_key, round_i)))
+
+    def _make_runtime(self, hist, target_return, log_cb,
+                      snapshots: bool = False):
         """The host async runtime for one ``train()`` call: eval/viz/SSD
-        workers behind latest-wins mailboxes (core.runtime)."""
+        (+ full-state snapshot) workers behind latest-wins mailboxes
+        (core.runtime), supervised per the config's resilience knobs."""
         cfg = self.cfg
         # workers fold the dedicated eval/viz streams by round index
         # themselves: publishing must stay free of device dispatch (two
         # eager fold_ins on the train thread cost more than the lock)
         return rt.HostRuntime(
-            # tracelint: allow[host-transfer] -- conversion runs on the async eval worker thread, not the train thread
-            eval_fn=lambda actor, round_i: float(self._eval(
-                actor, jax.random.fold_in(self._eval_key, round_i))),
+            eval_fn=self._eval_worker_fn,
             viz_fn=((lambda actor, round_key, round_i: self._viz_dump(
                 actor, jax.random.fold_in(self._viz_key, round_key),
                 round_i)) if cfg.viz_every_rounds else None),
             hist=hist,
             materialize_fn=(self._ssd_materialize
                             if cfg.weight_sync == "ssd" else None),
+            state_fn=((lambda item: resume_lib.write_bundle(
+                cfg.snapshot_dir, item, keep=cfg.keep_snapshots,
+                require_finite=True)) if snapshots else None),
             eval_workers=cfg.eval_workers, viz_workers=cfg.viz_workers,
-            target_return=target_return, log_cb=log_cb)
+            target_return=target_return, log_cb=log_cb,
+            policy=rt.SupervisorPolicy(
+                supervise=cfg.supervise,
+                max_restarts=cfg.worker_retry_budget,
+                heartbeat_timeout_s=cfg.worker_heartbeat_s))
 
     def _sanitize_scope(self):
         """Guard one hot-loop dispatch when ``cfg.sanitize``:
@@ -695,31 +748,112 @@ class SpreezeTrainer:
             stack.enter_context(jax.debug_nans(True))
             return stack.pop_all()
 
+    # ------------------------------------------------------------------ #
+    # finite-guard polling + rollback (the recovery half of core.faults)
+    # ------------------------------------------------------------------ #
+    def _poll_guard(self, blocking: bool = False) -> Optional[int]:
+        """Oldest round whose ``carry_finite`` metric came back False,
+        or None. Non-blocking by default: a flag is only inspected once
+        its device buffer is ready (``jax.Array.is_ready``), so the
+        poll never syncs the dispatch stream; ``blocking`` drains the
+        queue at end of run (the arrays are ready by then anyway)."""
+        q = self._guard_q
+        while q:
+            flag = q[0][1]
+            if not blocking:
+                ready = getattr(flag, "is_ready", None)
+                if ready is not None and not ready():
+                    return None
+            round_i = q.popleft()[0]
+            if not bool(flag):
+                return round_i
+        return None
+
+    def _rollback(self, runtime, hist, bad_round: int) -> int:
+        """Non-finite carry detected: back the LR off, restore the
+        latest on-disk snapshot (params, replay, env states, PRNG key,
+        counters, history), and hand back the round to resume from.
+        Fails loudly (FiniteGuardError) when there is nothing to roll
+        back to or the budget is spent — a diverged run must never
+        keep training silently."""
+        cfg = self.cfg
+        self._rollbacks += 1
+        if self._rollbacks > cfg.max_rollbacks:
+            raise faults.FiniteGuardError(
+                f"megastep carry went non-finite at round {bad_round} "
+                f"and the rollback budget ({cfg.max_rollbacks}) is spent")
+        if runtime is not None:
+            # land any in-flight snapshot write / eval result before
+            # picking the rollback target (rollback is off the hot path;
+            # blocking here is fine)
+            runtime.drain()
+        path = resume_lib.latest(cfg.snapshot_dir) if cfg.snapshot_dir \
+            else None
+        if path is None:
+            raise faults.FiniteGuardError(
+                f"megastep carry went non-finite at round {bad_round} "
+                f"and no snapshot exists to roll back to (set "
+                f"snapshot_dir to enable rollback)")
+        # the LR is baked into the compiled update step (the schedule
+        # closes over a Python float), so backing it off means a
+        # re-jit — acceptable on this rare, already-blocking path
+        self.hp = dataclasses.replace(
+            self.hp, lr=self.hp.lr * cfg.rollback_lr_backoff)
+        self._build_compiled()
+        meta = resume_lib.restore_trainer(self, path)
+        resume_lib.hist_restore(hist, meta.get("hist") or {})
+        self._guard_q.clear()
+        self._ssd_cache = None
+        warnings.warn(
+            f"non-finite megastep carry at round {bad_round}: rolled "
+            f"back to snapshot round {meta['round_i']} with lr backed "
+            f"off to {self.hp.lr:g} (rollback {self._rollbacks}/"
+            f"{cfg.max_rollbacks})")
+        return int(meta["round_i"])  # tracelint: allow[host-transfer] -- plain JSON meta int, not a device value; rollback is off the hot path anyway
+
     def train(self, *, max_seconds: float = 60.0, max_frames: int = 10**9,
               target_return: Optional[float] = None,
-              log_cb: Optional[Callable] = None) -> TrainHistory:
+              log_cb: Optional[Callable] = None,
+              resume_from: Optional[str] = None) -> TrainHistory:
         cfg = self.cfg
         hist = TrainHistory()
         frames_per_chunk = cfg.num_envs * cfg.chunk_len
+        self._fault_clock = (faults.FaultClock(cfg.fault_plan)
+                             if cfg.fault_plan is not None else None)
+        self._rollbacks = 0
+        start_round = 0
+        if resume_from is not None:
+            # restore BEFORE warmup: the snapshot's frame counter
+            # already covers the warmup budget, so _warmup no-ops and
+            # the resumed run replays no frames
+            meta = resume_lib.restore_trainer(self, resume_from)
+            start_round = int(meta["round_i"])  # tracelint: allow[host-transfer] -- plain JSON meta int; restore runs once before the timed window
+            resume_lib.hist_restore(hist, meta.get("hist") or {})
         pre_warmup = self.total_frames
         self._warmup()
         # warmup frames counted separately: the Hz headline metrics are
         # post-warmup frames over post-warmup wall time (dividing the
         # warmup-inclusive total by the post-warmup clock inflated them)
-        hist.warmup_frames = self.total_frames - pre_warmup
+        if resume_from is None:
+            hist.warmup_frames = self.total_frames - pre_warmup
         frames0, updates0 = self.total_frames, self.total_updates
         # round counters restart every train() call: a same-numbered
         # round from a previous run must not serve its cached SSD actor
         self._ssd_cache = None
         # fused: round counter advances R per dispatch; gating generalizes
         window = cfg.rounds_per_dispatch if self.use_fused else 1
+        # pending carry_finite flags, polled without syncing (fused path)
+        self._guard_q = collections.deque()
+        want_snaps = bool(cfg.snapshot_dir) and cfg.snapshot_every_rounds > 0
+        last_snap_t = float("-inf")     # first eligible window snapshots
         runtime = None
         if self.use_async_eval and (cfg.eval_every_rounds
-                                    or cfg.viz_every_rounds):
-            runtime = self._make_runtime(hist, target_return, log_cb)
+                                    or cfg.viz_every_rounds or want_snaps):
+            runtime = self._make_runtime(hist, target_return, log_cb,
+                                         snapshots=want_snaps)
 
         t0 = time.perf_counter()
-        round_i = 0
+        round_i = start_round
         solved_at = None
         try:
             while True:
@@ -729,6 +863,29 @@ class SpreezeTrainer:
                 if runtime is not None and runtime.solved.is_set():
                     solved_at = runtime.solved_time
                     break
+                # --- finite guard: poll settled flags, roll back on NaN
+                bad_round = self._poll_guard()
+                if bad_round is not None:
+                    round_i = self._rollback(runtime, hist, bad_round)
+                    continue
+                clock = self._fault_clock
+                if clock is not None and clock.preempt(round_i):
+                    # simulated SIGTERM between dispatches: drain the
+                    # runtime (every published snapshot is scored, so
+                    # the saved history is exact), snapshot, bail out
+                    if runtime is not None:
+                        runtime.close()
+                        hist.runtime_stats = runtime.stats()
+                        runtime = None
+                    path = (resume_lib.snapshot_now(self, hist, round_i)
+                            if cfg.snapshot_dir else None)
+                    raise faults.Preempted(
+                        f"injected preemption at round {round_i} "
+                        f"(snapshot: {path})",
+                        snapshot_path=path, round_i=round_i)
+                if clock is not None and clock.nan(round_i):
+                    self.state = self.state._replace(
+                        actor=faults.poison_actor(self.state.actor))
                 if self.use_fused:
                     # --- one device-resident megastep = R whole rounds ----
                     with self._sanitize_scope():
@@ -738,6 +895,10 @@ class SpreezeTrainer:
                             self.key)
                     self.total_frames += frames_per_chunk * window
                     self.total_updates += cfg.updates_per_round * window
+                    # enqueue the dispatch's finite flag; polled next
+                    # iteration once the buffer settles (never syncs)
+                    self._guard_q.append(
+                        (round_i, self.last_metrics["carry_finite"]))
                 else:
                     # --- sampler "process": dispatch, don't block ---------
                     with self._sanitize_scope():
@@ -803,10 +964,43 @@ class SpreezeTrainer:
                                     time.perf_counter() - tb)
                                 break
                     hist.eval_blocked_s += time.perf_counter() - tb
+                # --- periodic full-state snapshot (preemption safety) -----
+                if (want_snaps and _window_hits(round_i, window,
+                                                cfg.snapshot_every_rounds)
+                        and (time.perf_counter() - last_snap_t
+                             >= cfg.snapshot_min_interval_s)):
+                    # meta records the NEXT round: everything through
+                    # round_i+window-1 is in the bundle, so a resumed
+                    # run picks up exactly where this one left off
+                    if runtime is not None:
+                        # only copy when the writer will pick it up: a
+                        # bundle replaced latest-wins still costs a
+                        # device dispatch to build
+                        if runtime.state_slot_free():
+                            runtime.publish_state(resume_lib.publishable(
+                                self, hist, round_i + window))
+                            last_snap_t = time.perf_counter()
+                    else:
+                        # inline path syncs anyway; vet the bundle so a
+                        # poisoned state never becomes a rollback target
+                        resume_lib.write_bundle(
+                            cfg.snapshot_dir,
+                            resume_lib.publishable(self, hist,
+                                                   round_i + window),
+                            keep=cfg.keep_snapshots,
+                            require_finite=True)
+                        last_snap_t = time.perf_counter()
                 round_i += window
 
             # tracelint: allow[host-transfer] -- end-of-run barrier closing the timed window
             jax.block_until_ready(self.state.step)
+            # drain the guard queue: a run whose final dispatches went
+            # non-finite must fail loudly, never return as a success
+            bad_round = self._poll_guard(blocking=True)
+            if bad_round is not None:
+                raise faults.FiniteGuardError(
+                    f"megastep carry went non-finite at round {bad_round} "
+                    f"(detected at end of run)")
             wall = time.perf_counter() - t0
         finally:
             if runtime is not None:
@@ -817,6 +1011,14 @@ class SpreezeTrainer:
             if solved_at is None and runtime.solved.is_set():
                 solved_at = runtime.solved_time
             hist.runtime_stats = runtime.stats()
+        hist.runtime_stats["rollbacks"] = self._rollbacks
+        degraded = hist.runtime_stats.get("degraded") or []
+        if degraded:
+            warnings.warn(
+                f"training finished degraded: worker(s) {degraded} "
+                f"exhausted their restart budget and were dropped "
+                f"(restarts={hist.runtime_stats.get('worker_restarts')}, "
+                f"dropped={hist.runtime_stats.get('degraded_dropped')})")
         hist.wall_s = wall
         hist.sampling_hz = (self.total_frames - frames0) / wall
         hist.update_hz = (self.total_updates - updates0) / wall

@@ -3,17 +3,56 @@
 This doubles as the paper's SSD weight-transmission channel (§3.3.1): the
 network-update process periodically drops weights to disk; evaluation /
 visualization consumers pick them up without ever blocking the updater.
+It is also the storage layer for the preemption-safe full-state bundles
+in ``train/resume.py`` (see docs/robustness.md).
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import tempfile
-from typing import Any, Dict, Tuple
+import time
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file disagrees with the structure being restored.
+
+    Carries the offending keys so callers (and error logs) name exactly
+    what drifted instead of failing cryptically downstream:
+    ``missing`` — keys the restore target expects but the file lacks;
+    ``unexpected`` — keys the file carries but the target doesn't;
+    ``mismatched`` — keys whose stored shape/dtype can't restore into
+    the target leaf (list of ``(key, expected, got)`` strings).
+    """
+
+    def __init__(self, msg: str, *, missing: Sequence[str] = (),
+                 unexpected: Sequence[str] = (),
+                 mismatched: Sequence[str] = ()):
+        super().__init__(msg)
+        self.missing = tuple(missing)
+        self.unexpected = tuple(unexpected)
+        self.mismatched = tuple(mismatched)
+
+
+#: OSError errnos that retrying cannot heal: permission/path/usage
+#: errors stay wrong no matter how long the disk is given to settle.
+_NONTRANSIENT_ERRNOS = frozenset({
+    errno.EACCES, errno.EPERM, errno.EROFS, errno.ENOENT, errno.ENOTDIR,
+    errno.EISDIR, errno.EINVAL, errno.ENAMETOOLONG, errno.ELOOP,
+})
+
+
+def _transient_oserror(e: OSError) -> bool:
+    """Busy-disk class errors (EAGAIN/EBUSY/EIO/ENOSPC while the channel
+    rotates files, or errno-less wrapped errors) are worth retrying;
+    configuration errors (bad path, permissions) are not."""
+    return e.errno not in _NONTRANSIENT_ERRNOS
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -25,14 +64,32 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+def save(path: str, tree, metadata: Dict[str, Any] | None = None, *,
+         retries: int = 3, backoff_s: float = 0.05) -> None:
     """Atomic save (write-then-rename, so concurrent readers never see a
     torn file — the property the paper relies on for SSD weight sync).
     A failed write unlinks the temp file instead of leaking it next to
     the checkpoint (the async SSD channel saves once per eval window —
-    leaked ``.tmp`` files would accumulate for the whole run)."""
+    leaked ``.tmp`` files would accumulate for the whole run).
+
+    Transient ``OSError`` (busy disk — the SSD channel's whole job is
+    surviving one) is retried up to ``retries`` times with exponential
+    backoff; non-transient errors (bad path, permissions) raise
+    immediately. Every failed attempt cleans up its own temp file."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(tree)
+    for attempt in range(retries + 1):
+        try:
+            _save_once(path, flat, metadata)
+            return
+        except OSError as e:
+            if not _transient_oserror(e) or attempt >= retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
+
+
+def _save_once(path: str, flat: Dict[str, np.ndarray],
+               metadata: Dict[str, Any] | None) -> None:
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
     try:
@@ -48,19 +105,48 @@ def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
 
 
 def restore(path: str, like) -> Tuple[Any, Dict[str, Any]]:
-    """Restore into the structure of ``like`` (a pytree or its eval_shape)."""
+    """Restore into the structure of ``like`` (a pytree or its eval_shape).
+
+    Raises :class:`CheckpointError` when the file's key set, or any
+    stored leaf's shape/dtype, disagrees with ``like`` — a resumed run
+    must fail at restore time naming the drifted keys, not N dispatches
+    later inside compiled code."""
     with np.load(path, allow_pickle=False) as data:
         meta = json.loads(str(data["__meta__"]))
         flat = {k: data[k] for k in data.files if k != "__meta__"}
     ref = _flatten(like)
-    assert set(ref) == set(flat), (
-        f"checkpoint keys mismatch: {set(ref) ^ set(flat)}")
+    if set(ref) != set(flat):
+        missing = sorted(set(ref) - set(flat))
+        unexpected = sorted(set(flat) - set(ref))
+        raise CheckpointError(
+            f"checkpoint {path!r} keys mismatch: "
+            f"missing={missing} unexpected={unexpected}",
+            missing=missing, unexpected=unexpected)
     leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    mismatched = []
     out = []
     for path_k, leaf in leaves_ref:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in path_k)
-        out.append(jnp.asarray(flat[key], dtype=leaf.dtype))
+        stored = flat[key]
+        want_shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        want_dtype = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if tuple(stored.shape) != want_shape:
+            mismatched.append(f"{key}: shape {want_shape} != stored "
+                              f"{tuple(stored.shape)}")
+        elif (stored.dtype != want_dtype
+              and stored.dtype.kind != want_dtype.kind):
+            # same-kind width casts (f64 file -> f32 leaf) stay allowed —
+            # np.savez stores whatever numpy widened to; cross-kind casts
+            # (float ring row restored into an int cursor) are corruption
+            mismatched.append(f"{key}: dtype {want_dtype} incompatible "
+                              f"with stored {stored.dtype}")
+        else:
+            out.append(jnp.asarray(stored, dtype=leaf.dtype))
+    if mismatched:
+        raise CheckpointError(
+            f"checkpoint {path!r} leaf mismatch: " + "; ".join(mismatched),
+            mismatched=mismatched)
     return jax.tree_util.tree_unflatten(jax.tree.structure(like), out), meta
 
 

@@ -1,0 +1,224 @@
+"""Preemption-safe resume: full-trainer-state snapshot bundles.
+
+``train/checkpoint.py`` historically saved only actor weights (the
+paper's SSD eval channel); nothing in the repo could resume a run. This
+module snapshots the *entire* trainer carry — actor/critic/target
+params, optimizer state, the replay ring contents + write cursor (and
+the PER priority mass when prioritized), the live PRNG key, plus the
+round/frame counters and recorded ``TrainHistory`` — as one atomic
+multi-array ``.npz`` bundle, with last-K retention.
+
+Determinism contract (the PR 4/5 one, extended): everything the next
+megastep dispatch reads is in the bundle, and everything else a
+resumed trainer needs is *reconstructed* from the config (the eval/viz
+parent PRNG streams are derived from ``cfg.seed`` at construction and
+never advance), so interrupt-at-round-R + resume is **bitwise
+identical** to an uninterrupted run — same params, same PER draws, same
+``TrainHistory`` — on the dispatch-bound probe. ``tests/test_resume.py``
+asserts this in both the default and forced-8-device jobs.
+
+Write path: the trainer publishes ``(device-copied bundle, meta)`` into
+the host runtime's latest-wins state mailbox and keeps dispatching; the
+dedicated snapshot worker (the SSD-channel machinery generalized)
+converts to host memory and writes through ``checkpoint.save``'s
+atomic write-then-rename — the hot loop pays one async device-copy
+dispatch per cadence and zero host syncs. See docs/robustness.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import faults
+from repro.train import checkpoint
+
+SNAP_PREFIX = "snap_"
+SNAP_SUFFIX = ".npz"
+
+#: config fields a snapshot must agree on to be resumable: everything
+#: that changes the compiled math or the carried shapes. Deliberately
+#: excludes tunables the trainer itself may change mid-run (the
+#: rollback LR backoff rewrites ``hp.lr`` before restoring).
+_SIG_FIELDS = ("env_name", "algo", "num_envs", "batch_size",
+               "replay_capacity", "chunk_len", "updates_per_round",
+               "rounds_per_dispatch", "nstep", "prioritized", "per_alpha",
+               "per_beta", "placement", "seed")
+
+#: TrainHistory list fields restored verbatim (round-ordered eval log)
+_HIST_FIELDS = ("times", "eval_returns", "env_frames", "update_steps",
+                "eval_rounds")
+
+
+def snapshot_path(snap_dir: str, round_i: int) -> str:
+    return os.path.join(snap_dir, f"{SNAP_PREFIX}{round_i:09d}{SNAP_SUFFIX}")
+
+
+def list_snapshots(snap_dir: str) -> List[Tuple[int, str]]:
+    """(round, path) pairs, oldest first."""
+    if not os.path.isdir(snap_dir):
+        return []
+    out = []
+    for f in os.listdir(snap_dir):
+        if f.startswith(SNAP_PREFIX) and f.endswith(SNAP_SUFFIX):
+            try:
+                out.append((int(f[len(SNAP_PREFIX):-len(SNAP_SUFFIX)]),
+                            os.path.join(snap_dir, f)))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest(snap_dir: str) -> Optional[str]:
+    snaps = list_snapshots(snap_dir)
+    return snaps[-1][1] if snaps else None
+
+
+def prune(snap_dir: str, keep: int) -> None:
+    if keep <= 0:
+        return
+    for _, path in list_snapshots(snap_dir)[:-keep]:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
+
+def config_sig(cfg) -> str:
+    return json.dumps({k: getattr(cfg, k) for k in _SIG_FIELDS},
+                      sort_keys=True)
+
+
+# --------------------------------------------------------------------------- #
+# bundle construction / serialization
+# --------------------------------------------------------------------------- #
+
+def bundle_from(trainer) -> Dict[str, Any]:
+    """The complete megastep carry: everything the next dispatch reads.
+    ``state`` is the full AlgoState (actor/Q/target params, optimizer
+    moments, alpha, step counter); ``replay`` the ring (plus PER
+    priorities + max-priority mass when prioritized)."""
+    return {"state": trainer.state, "replay": trainer.replay,
+            "env_states": trainer.env_states, "key": trainer.key}
+
+
+def hist_to_meta(hist) -> Dict[str, Any]:
+    with hist._lock:
+        d = {k: list(getattr(hist, k)) for k in _HIST_FIELDS}
+    d["warmup_frames"] = int(hist.warmup_frames)
+    return d
+
+
+def hist_restore(hist, d: Dict[str, Any]) -> None:
+    with hist._lock:
+        for k in _HIST_FIELDS:
+            getattr(hist, k)[:] = list(d.get(k, []))
+    hist.warmup_frames = int(d.get("warmup_frames", 0))
+
+
+def build_meta(trainer, hist, round_i: int) -> Dict[str, Any]:
+    """JSON-able sidecar: the resume point (``round_i`` is the next
+    round to execute), the host-side counters, the config fingerprint,
+    and the recorded history."""
+    return {"round_i": int(round_i),
+            "total_frames": int(trainer.total_frames),
+            "total_updates": int(trainer.total_updates),
+            "config_sig": config_sig(trainer.cfg),
+            "hist": hist_to_meta(hist) if hist is not None else {}}
+
+
+# One compiled program per bundle structure. ``jax.tree.map(jnp.copy)``
+# outside jit dispatches one XLA program *per leaf* — dozens of ~1ms
+# host round-trips on the train thread per snapshot, which halves the
+# dispatch-bound rounds/s at the default cadence. Under jit the whole
+# bundle copies in a single dispatch. Nothing is donated, so the
+# outputs are fresh buffers the worker owns while the next megastep
+# donates the live carry.
+_copy_bundle = jax.jit(lambda bundle: jax.tree.map(jnp.copy, bundle))
+
+
+def publishable(trainer, hist, round_i: int) -> Tuple[Any, Dict]:
+    """A ``(bundle, meta)`` item safe to hand to the async snapshot
+    worker: every leaf is a fresh async device copy, so the next
+    megastep can donate the live carry while the worker serializes —
+    one copy dispatch, no host sync, on the train thread."""
+    return _copy_bundle(bundle_from(trainer)), \
+        build_meta(trainer, hist, round_i)
+
+
+def write_bundle(snap_dir: str, item: Tuple[Any, Dict], *, keep: int = 3,
+                 require_finite: bool = False) -> Optional[str]:
+    """Persist one ``(bundle, meta)`` item atomically, then prune to the
+    last ``keep`` snapshots. With ``require_finite`` a poisoned bundle
+    (one the finite guard already tripped on, still in flight on the
+    mailbox) is *skipped* with a warning instead of written — a rollback
+    target containing NaN would resurrect the divergence it rolls back
+    from."""
+    bundle, meta = item
+    if require_finite and not bool(faults.finite_guard(bundle)):
+        warnings.warn(f"skipping snapshot at round {meta.get('round_i')}: "
+                      f"bundle contains non-finite values")
+        return None
+    path = snapshot_path(snap_dir, int(meta["round_i"]))
+    checkpoint.save(path, bundle, metadata=meta)
+    prune(snap_dir, keep)
+    return path
+
+
+def snapshot_now(trainer, hist, round_i: int) -> str:
+    """Synchronous snapshot (the preemption path and the inline
+    ablation): the caller is about to stop dispatching, so the live
+    arrays are written directly — no copy needed."""
+    cfg = trainer.cfg
+    return write_bundle(cfg.snapshot_dir,
+                        (bundle_from(trainer),
+                         build_meta(trainer, hist, round_i)),
+                        keep=cfg.keep_snapshots)
+
+
+# --------------------------------------------------------------------------- #
+# restore
+# --------------------------------------------------------------------------- #
+
+def restore_trainer(trainer, path: str) -> Dict[str, Any]:
+    """Load ``path`` into ``trainer`` in place and return its meta.
+
+    Validates the config fingerprint (a bundle restored into a
+    different env/batch/capacity config must fail here, by name, not N
+    dispatches later inside compiled code — ``checkpoint.restore``
+    additionally rejects per-leaf shape/dtype drift) and vets the
+    bundle through the jitted finite guard. On a mesh trainer every
+    carried pytree is device_put back onto its megastep sharding, so
+    the first resumed dispatch donates in place instead of resharding.
+    """
+    like = bundle_from(trainer)
+    bundle, meta = checkpoint.restore(path, like)
+    sig = config_sig(trainer.cfg)
+    if meta.get("config_sig") != sig:
+        raise checkpoint.CheckpointError(
+            f"snapshot {path!r} was written by a different trainer "
+            f"config:\n  snapshot: {meta.get('config_sig')}\n  "
+            f"trainer:  {sig}")
+    if not bool(faults.finite_guard(bundle)):
+        raise faults.FiniteGuardError(
+            f"snapshot {path!r} contains non-finite values — refusing "
+            f"to resume from a diverged state")
+    if trainer.cfg.mesh is not None:
+        bundle["state"] = jax.device_put(bundle["state"],
+                                         trainer._state_sharding)
+        bundle["replay"] = jax.device_put(bundle["replay"],
+                                          trainer._replay_sharding)
+        bundle["env_states"] = jax.device_put(bundle["env_states"],
+                                              trainer._env_sharding)
+    trainer.state = bundle["state"]
+    trainer.replay = bundle["replay"]
+    trainer.env_states = bundle["env_states"]
+    trainer.key = bundle["key"]
+    trainer.total_frames = int(meta.get("total_frames", 0))
+    trainer.total_updates = int(meta.get("total_updates", 0))
+    trainer.last_metrics = None
+    return meta

@@ -40,3 +40,79 @@ def test_save_unlinks_temp_on_write_failure(tmp_path, monkeypatch):
     assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == [], \
         "failed save leaked its mkstemp temp file"
     assert open(path, "rb").read() == before  # old checkpoint untouched
+
+
+def test_restore_key_mismatch_names_offenders(tmp_path):
+    """Satellite of the robustness PR: a drifted checkpoint fails by
+    NAME (CheckpointError carrying the offending keys), not via a bare
+    assert or a shape error N dispatches later."""
+    path = str(tmp_path / "actor.npz")
+    checkpoint.save(path, _tree())
+    like = {"w": _tree()["w"], "extra": jnp.zeros((2,), jnp.float32)}
+    with pytest.raises(checkpoint.CheckpointError) as ei:
+        checkpoint.restore(path, like)
+    assert ei.value.missing == ("extra",)
+    assert ei.value.unexpected == ("b",)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    path = str(tmp_path / "actor.npz")
+    checkpoint.save(path, _tree())
+    like = {"w": jnp.zeros((3, 2), jnp.float32),   # transposed
+            "b": _tree()["b"]}
+    with pytest.raises(checkpoint.CheckpointError) as ei:
+        checkpoint.restore(path, like)
+    assert any("w" in m and "shape" in m for m in ei.value.mismatched)
+
+
+def test_restore_dtype_cross_kind_rejected_same_kind_cast_ok(tmp_path):
+    path = str(tmp_path / "actor.npz")
+    checkpoint.save(path, {"x": jnp.arange(4, dtype=jnp.float32)})
+    # same-kind width cast: fine (npz may store widened floats)
+    out, _ = checkpoint.restore(path, {"x": jnp.zeros(4, jnp.float16)})
+    assert out["x"].dtype == jnp.float16
+    # cross-kind (float file -> int leaf): corruption, rejected by name
+    with pytest.raises(checkpoint.CheckpointError) as ei:
+        checkpoint.restore(path, {"x": jnp.zeros(4, jnp.int32)})
+    assert any("x" in m and "dtype" in m for m in ei.value.mismatched)
+
+
+def test_save_retries_transient_then_succeeds(tmp_path, monkeypatch):
+    """Two injected busy-disk failures, then success — no temp leak,
+    checkpoint lands."""
+    path = str(tmp_path / "actor.npz")
+    orig = np.savez
+    fails = {"left": 2}
+
+    def flaky(*a, **kw):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("device busy")
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(np, "savez", flaky)
+    checkpoint.save(path, _tree(), retries=3, backoff_s=0.001)
+    assert fails["left"] == 0
+    out, _ = checkpoint.restore(path, _tree())
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_tree()["w"]))
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_save_nontransient_oserror_raises_immediately(tmp_path,
+                                                      monkeypatch):
+    """EACCES is a configuration error: retrying cannot heal it, so the
+    first failure must surface (and leave no temp file)."""
+    import errno
+    path = str(tmp_path / "actor.npz")
+    calls = {"n": 0}
+
+    def denied(*a, **kw):
+        calls["n"] += 1
+        raise OSError(errno.EACCES, "permission denied")
+
+    monkeypatch.setattr(np, "savez", denied)
+    with pytest.raises(OSError):
+        checkpoint.save(path, _tree(), retries=5, backoff_s=0.001)
+    assert calls["n"] == 1, "non-transient error was retried"
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []

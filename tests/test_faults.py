@@ -1,0 +1,287 @@
+"""Deterministic fault injection: every FaultPlan injection point either
+recovers (supervised retry / watchdog replacement / rollback) or fails
+loudly (fatal propagation, spent budgets) — never hangs, never silently
+corrupts a run. Part of the CI chaos step (see docs/robustness.md)."""
+import tempfile
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import SpreezeConfig, SpreezeTrainer, TrainHistory, faults
+from repro.core.runtime import HostRuntime, Snapshot, SupervisorPolicy
+from repro.core.runtime import classify_error
+
+
+def _snap(round_i, actor="a"):
+    return Snapshot(round_i=round_i, actor=actor, eval_key=round_i,
+                    viz_key=round_i, t=float(round_i), frames=round_i * 10,
+                    steps=round_i, want_eval=True, want_viz=False)
+
+
+def _cfg(**kw):
+    base = dict(env_name="pendulum", algo="sac", num_envs=2, batch_size=32,
+                chunk_len=4, updates_per_round=2, warmup_frames=32,
+                replay_capacity=256, eval_every_rounds=10**9, seed=3,
+                rounds_per_dispatch=2, snapshot_min_interval_s=0.0)
+    base.update(kw)
+    return SpreezeConfig(**base)
+
+
+_FAST = SupervisorPolicy(max_restarts=3, backoff_base_s=0.001,
+                         backoff_max_s=0.01, heartbeat_timeout_s=0)
+
+
+# --------------------------------------------------------------------------- #
+# error taxonomy + supervisor units (no trainer, fast)
+# --------------------------------------------------------------------------- #
+
+def test_classify_error_taxonomy():
+    for e in (OSError("io"), ConnectionError("net"), TimeoutError("t")):
+        assert classify_error(e) == "transient"
+    for e in (ValueError("bug"), KeyError("bug"), AssertionError("bug")):
+        assert classify_error(e) == "fatal"
+
+
+def test_supervisor_retries_transient_and_recovers():
+    """Two transient failures, then success: the snapshot is retried
+    (not dropped), the result lands, and the restarts are counted."""
+    hist = TrainHistory()
+    fails = {"left": 2}
+
+    def eval_fn(actor, key):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise OSError("injected transient failure")
+        return 7.0
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist, policy=_FAST)
+    r.publish(_snap(0))
+    r.close()
+    s = r.stats()
+    assert hist.eval_returns == [7.0]
+    assert s["worker_restarts"] == 2
+    assert s["degraded"] == []
+
+
+def test_supervisor_fatal_error_propagates():
+    """A programming error is NOT retried: it surfaces in the train
+    thread on drain/close, exactly like the unsupervised runtime."""
+    def eval_fn(actor, key):
+        raise ValueError("injected programming error")
+
+    r = HostRuntime(eval_fn=eval_fn, hist=TrainHistory(), policy=_FAST)
+    r.publish(_snap(0))
+    with pytest.raises(RuntimeError, match="worker failed") as ei:
+        r.close()
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert r.stats()["worker_restarts"] == 0    # fatal: never retried
+
+
+def test_supervisor_budget_exhaustion_degrades():
+    """A consumer that keeps failing transiently degrades after its
+    budget: later snapshots are dropped + counted, the run continues,
+    and close() raises nothing."""
+    hist = TrainHistory()
+
+    def eval_fn(actor, key):
+        raise OSError("injected persistent failure")
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist,
+                    policy=SupervisorPolicy(max_restarts=2,
+                                            backoff_base_s=0.001,
+                                            heartbeat_timeout_s=0))
+    r.publish(_snap(0))
+    r.drain()
+    r.publish(_snap(2))              # consumer already degraded: dropped
+    r.close()                        # must NOT raise
+    s = r.stats()
+    assert s["degraded"] == ["eval"]
+    assert s["worker_restarts"] == 2
+    assert s["degraded_dropped"] >= 1
+    assert hist.eval_returns == []
+
+
+def test_watchdog_detects_hang_and_replaces_worker():
+    """A worker stuck past the heartbeat timeout is abandoned and
+    replaced; later snapshots are still scored by the replacement."""
+    hist = TrainHistory()
+    release = threading.Event()
+
+    def eval_fn(actor, key):
+        if actor == "hang":
+            release.wait(20.0)       # stuck well past the heartbeat
+            return -1.0
+        return float(key)
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist,
+                    policy=SupervisorPolicy(max_restarts=3,
+                                            backoff_base_s=0.001,
+                                            heartbeat_timeout_s=0.15))
+    r.publish(_snap(0, actor="hang"))
+    deadline = time.time() + 10.0
+    while r.stats()["worker_hangs"] < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    r.publish(_snap(2, actor="ok"))
+    r.drain()
+    release.set()                    # let the retired thread exit
+    r.close()
+    s = r.stats()
+    assert s["worker_hangs"] >= 1
+    assert s["worker_restarts"] >= 1
+    assert hist.eval_rounds == [2]   # the hung round was abandoned
+    assert hist.eval_returns == [2.0]
+
+
+def test_abandoned_result_does_not_record():
+    """If the hung worker eventually wakes, its stale result must be
+    discarded (the claim was abandoned), not recorded into history."""
+    hist = TrainHistory()
+    release = threading.Event()
+
+    def eval_fn(actor, key):
+        if actor == "hang":
+            release.wait(20.0)
+            return -99.0             # must never reach hist
+        return float(key)
+
+    r = HostRuntime(eval_fn=eval_fn, hist=hist,
+                    policy=SupervisorPolicy(max_restarts=3,
+                                            backoff_base_s=0.001,
+                                            heartbeat_timeout_s=0.15))
+    r.publish(_snap(0, actor="hang"))
+    deadline = time.time() + 10.0
+    while r.stats()["worker_hangs"] < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    release.set()                    # wake it AFTER abandonment
+    time.sleep(0.1)
+    r.close()
+    assert -99.0 not in hist.eval_returns
+
+
+# --------------------------------------------------------------------------- #
+# finite guard units
+# --------------------------------------------------------------------------- #
+
+def test_tree_finite_and_poison():
+    clean = {"a": np.ones((3,), np.float32), "n": np.arange(4)}
+    assert bool(faults.finite_guard(clean))
+    dirty = {"a": np.array([1.0, np.nan, 2.0], np.float32)}
+    assert not bool(faults.finite_guard(dirty))
+    poisoned = faults.poison_actor(clean)
+    assert not bool(faults.finite_guard(poisoned))
+    # int leaves are untouched (NaN has no integer encoding)
+    assert np.array_equal(np.asarray(poisoned["n"]), clean["n"])
+
+
+def test_fault_clock_fires_exactly_repeat_times():
+    plan = faults.FaultPlan(ssd_oserror_rounds=(4,), ssd_oserror_repeat=2,
+                            nan_round=6)
+    clock = faults.FaultClock(plan)
+    for _ in range(2):
+        with pytest.raises(OSError):
+            clock.ssd_oserror(4)
+    clock.ssd_oserror(4)             # budget spent: no raise
+    clock.ssd_oserror(2)             # unscheduled round: no raise
+    assert clock.nan(5) is False     # not reached yet
+    assert clock.nan(7) is True      # first round index >= 6
+    assert clock.nan(7) is False     # consumed: rollback replay is safe
+
+
+# --------------------------------------------------------------------------- #
+# trainer-level injections (each point recovers or fails loudly)
+# --------------------------------------------------------------------------- #
+
+def test_ssd_oserror_injection_recovers():
+    """One injected SSD write failure: the supervisor retries the same
+    snapshot, eval still lands, the restart is recorded."""
+    plan = faults.FaultPlan(ssd_oserror_rounds=(2,))
+    cfg = _cfg(eval_every_rounds=2, async_eval=True, weight_sync="ssd",
+               fault_plan=plan, worker_heartbeat_s=0)
+    tr = SpreezeTrainer(cfg)
+    hist = tr.train(max_seconds=60, max_frames=8 * 8)
+    s = hist.runtime_stats
+    assert s["worker_restarts"] >= 1
+    assert s["degraded"] == []
+    assert len(hist.eval_returns) >= 1
+
+
+def test_eval_transient_injection_recovers():
+    plan = faults.FaultPlan(eval_error_rounds=(2,))
+    cfg = _cfg(eval_every_rounds=2, async_eval=True, fault_plan=plan,
+               worker_heartbeat_s=0)
+    tr = SpreezeTrainer(cfg)
+    hist = tr.train(max_seconds=60, max_frames=8 * 8)
+    s = hist.runtime_stats
+    assert s["worker_restarts"] >= 1
+    assert s["degraded"] == []
+    assert 2 in hist.eval_rounds     # the faulted round was retried
+
+
+def test_eval_fatal_injection_fails_loudly():
+    """A programming error in a worker must kill the run, supervised or
+    not — retrying a bug would hide it."""
+    plan = faults.FaultPlan(eval_error_rounds=(2,),
+                            eval_error_transient=False)
+    cfg = _cfg(eval_every_rounds=2, async_eval=True, fault_plan=plan,
+               worker_heartbeat_s=0)
+    tr = SpreezeTrainer(cfg)
+    with pytest.raises(RuntimeError, match="worker failed") as ei:
+        tr.train(max_seconds=60, max_frames=8 * 8)
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+def test_eval_hang_injection_watchdog_recovers():
+    """A hung eval worker is detected by heartbeat and replaced; the
+    run finishes with the hang recorded."""
+    plan = faults.FaultPlan(eval_hang_rounds=(2,), hang_seconds=3.0)
+    cfg = _cfg(eval_every_rounds=2, async_eval=True, fault_plan=plan,
+               worker_heartbeat_s=0.2)
+    tr = SpreezeTrainer(cfg)
+    hist = tr.train(max_seconds=60, max_frames=8 * 8)
+    s = hist.runtime_stats
+    assert s["worker_hangs"] >= 1
+    assert s["worker_restarts"] >= 1
+
+
+def test_nan_injection_rolls_back_with_lr_backoff():
+    with tempfile.TemporaryDirectory() as d:
+        plan = faults.FaultPlan(nan_round=6)
+        cfg = _cfg(async_eval=False, snapshot_dir=d,
+                   snapshot_every_rounds=2, fault_plan=plan)
+        tr = SpreezeTrainer(cfg)
+        lr0 = tr.hp.lr
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            hist = tr.train(max_seconds=120, max_frames=16 * 8)
+        assert hist.runtime_stats["rollbacks"] == 1
+        assert tr.hp.lr == pytest.approx(lr0 * cfg.rollback_lr_backoff)
+        assert bool(faults.finite_guard(tr.state.actor))
+        assert tr.total_frames == 16 * 8      # recovered to full budget
+        msgs = [str(x.message) for x in w]
+        assert any("rolled back" in m for m in msgs)
+        # the poisoned bundle in flight was vetted out, never written
+        assert any("skipping snapshot" in m for m in msgs)
+
+
+def test_nan_without_snapshot_fails_loudly():
+    plan = faults.FaultPlan(nan_round=4)
+    cfg = _cfg(async_eval=False, fault_plan=plan)   # no snapshot_dir
+    tr = SpreezeTrainer(cfg)
+    with pytest.raises(faults.FiniteGuardError, match="non-finite"):
+        tr.train(max_seconds=120, max_frames=16 * 8)
+
+
+def test_rollback_budget_exhaustion_fails_loudly():
+    """max_rollbacks=0: the first non-finite carry must raise instead
+    of looping rollback forever."""
+    with tempfile.TemporaryDirectory() as d:
+        plan = faults.FaultPlan(nan_round=4)
+        cfg = _cfg(async_eval=False, snapshot_dir=d,
+                   snapshot_every_rounds=2, fault_plan=plan,
+                   max_rollbacks=0)
+        tr = SpreezeTrainer(cfg)
+        with pytest.raises(faults.FiniteGuardError, match="non-finite"):
+            tr.train(max_seconds=120, max_frames=16 * 8)

@@ -1,0 +1,235 @@
+"""Preemption-safe resume: snapshot bundle roundtrips, retention,
+validation-by-name, and the bitwise interrupt/resume determinism
+contract — in the default job and (via subprocess) on a forced
+8-device mesh. Part of the CI chaos step (see docs/robustness.md)."""
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SpreezeConfig, SpreezeTrainer, TrainHistory, faults
+from repro.train import checkpoint
+from repro.train import resume as resume_lib
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK = os.path.join(ROOT, "tests", "sharded_resume_check.py")
+
+
+def _cfg(snap_dir=None, **kw):
+    base = dict(env_name="pendulum", algo="sac", num_envs=2, batch_size=32,
+                chunk_len=4, updates_per_round=2, warmup_frames=32,
+                replay_capacity=256, eval_every_rounds=10**9, seed=3,
+                rounds_per_dispatch=2, async_eval=False,
+                snapshot_dir=snap_dir, snapshot_every_rounds=2,
+                snapshot_min_interval_s=0.0)
+    base.update(kw)
+    return SpreezeConfig(**base)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _train(tr, dispatches, **kw):
+    # frames_per_chunk (2 envs x 4 steps) x rounds_per_dispatch (2)
+    return tr.train(max_seconds=600, max_frames=dispatches * 16, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# bundle mechanics
+# --------------------------------------------------------------------------- #
+
+def test_snapshot_roundtrip_restores_full_carry():
+    with tempfile.TemporaryDirectory() as d:
+        tr = SpreezeTrainer(_cfg(d))
+        hist = _train(tr, 3)
+        path = resume_lib.snapshot_now(tr, hist, round_i=6)
+        tr2 = SpreezeTrainer(_cfg(d))
+        meta = resume_lib.restore_trainer(tr2, path)
+        assert _trees_equal(tr.state, tr2.state)
+        assert _trees_equal(tr.replay, tr2.replay)
+        assert _trees_equal(tr.env_states, tr2.env_states)
+        assert np.array_equal(np.asarray(tr.key), np.asarray(tr2.key))
+        assert tr2.total_frames == tr.total_frames
+        assert tr2.total_updates == tr.total_updates
+        assert meta["round_i"] == 6
+
+
+def test_retention_prunes_to_keep_and_latest_wins():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = _cfg(d, keep_snapshots=2)
+        tr = SpreezeTrainer(cfg)
+        hist = TrainHistory()
+        tr._warmup()
+        for r in (2, 4, 6, 8):
+            resume_lib.snapshot_now(tr, hist, round_i=r)
+        rounds = [r for r, _ in resume_lib.list_snapshots(d)]
+        assert rounds == [6, 8]
+        assert resume_lib.latest(d) == resume_lib.snapshot_path(d, 8)
+
+
+def test_config_mismatch_fails_by_name():
+    with tempfile.TemporaryDirectory() as d:
+        tr = SpreezeTrainer(_cfg(d))
+        tr._warmup()
+        path = resume_lib.snapshot_now(tr, TrainHistory(), round_i=0)
+        # same shapes, different math: seed is in the fingerprint
+        tr2 = SpreezeTrainer(_cfg(d, seed=99))
+        with pytest.raises(checkpoint.CheckpointError,
+                           match="different trainer config"):
+            resume_lib.restore_trainer(tr2, path)
+
+
+def test_shape_mismatch_fails_by_key():
+    with tempfile.TemporaryDirectory() as d:
+        tr = SpreezeTrainer(_cfg(d))
+        tr._warmup()
+        path = resume_lib.snapshot_now(tr, TrainHistory(), round_i=0)
+        tr2 = SpreezeTrainer(_cfg(d, replay_capacity=512))
+        with pytest.raises(checkpoint.CheckpointError):
+            resume_lib.restore_trainer(tr2, path)
+
+
+def test_restore_rejects_nonfinite_bundle():
+    with tempfile.TemporaryDirectory() as d:
+        tr = SpreezeTrainer(_cfg(d))
+        tr._warmup()
+        tr.state = tr.state._replace(
+            actor=faults.poison_actor(tr.state.actor))
+        path = resume_lib.snapshot_now(tr, TrainHistory(), round_i=0)
+        tr2 = SpreezeTrainer(_cfg(d))
+        with pytest.raises(faults.FiniteGuardError, match="non-finite"):
+            resume_lib.restore_trainer(tr2, path)
+
+
+def test_hist_meta_roundtrip():
+    hist = TrainHistory()
+    hist.record_eval(1.0, -2.5, 100, 10, round_i=2)
+    hist.record_eval(2.0, -1.5, 200, 20, round_i=4)
+    hist.warmup_frames = 32
+    d = resume_lib.hist_to_meta(hist)
+    hist2 = TrainHistory()
+    resume_lib.hist_restore(hist2, d)
+    assert hist2.eval_returns == hist.eval_returns
+    assert hist2.eval_rounds == hist.eval_rounds
+    assert hist2.env_frames == hist.env_frames
+    assert hist2.warmup_frames == 32
+
+
+# --------------------------------------------------------------------------- #
+# interrupt -> resume determinism (the contract)
+# --------------------------------------------------------------------------- #
+
+def test_preempt_resume_bitwise_identical():
+    """Interrupt at round 6 of 12, resume from the preemption snapshot:
+    final params, replay ring, PRNG key, counters, and the recorded
+    TrainHistory must be bitwise identical to the uninterrupted run."""
+    with tempfile.TemporaryDirectory() as d_ref, \
+            tempfile.TemporaryDirectory() as d_int:
+        cfg_ref = _cfg(d_ref, eval_every_rounds=4)
+        tr_ref = SpreezeTrainer(cfg_ref)
+        hist_ref = _train(tr_ref, 6)
+
+        plan = faults.FaultPlan(preempt_round=6)
+        tr_int = SpreezeTrainer(_cfg(d_int, eval_every_rounds=4,
+                                     fault_plan=plan))
+        snap = None
+        with pytest.raises(faults.Preempted) as ei:
+            _train(tr_int, 6)
+        snap = ei.value.snapshot_path
+        assert snap is not None and os.path.exists(snap)
+        assert ei.value.round_i == 6
+
+        tr_res = SpreezeTrainer(_cfg(d_int, eval_every_rounds=4))
+        hist_res = _train(tr_res, 6, resume_from=snap)
+
+        assert _trees_equal(tr_ref.state, tr_res.state)
+        assert _trees_equal(tr_ref.replay, tr_res.replay)
+        assert np.array_equal(np.asarray(tr_ref.key),
+                              np.asarray(tr_res.key))
+        assert tr_ref.total_frames == tr_res.total_frames
+        assert tr_ref.total_updates == tr_res.total_updates
+        # history: the resumed run replays no eval round and loses none
+        assert hist_res.eval_rounds == hist_ref.eval_rounds
+        assert hist_res.eval_returns == hist_ref.eval_returns
+        assert hist_res.env_frames == hist_ref.env_frames
+        assert hist_res.warmup_frames == hist_ref.warmup_frames
+
+
+def test_preempt_resume_prioritized_draws_identical():
+    """Same contract with PER on: the priority mass is part of the
+    bundle, so post-resume prioritized draws match exactly."""
+    from repro.replay import prioritized as per
+    with tempfile.TemporaryDirectory() as d_ref, \
+            tempfile.TemporaryDirectory() as d_int:
+        tr_ref = SpreezeTrainer(_cfg(d_ref, prioritized=True))
+        _train(tr_ref, 5)
+
+        plan = faults.FaultPlan(preempt_round=4)
+        tr_int = SpreezeTrainer(_cfg(d_int, prioritized=True,
+                                     fault_plan=plan))
+        with pytest.raises(faults.Preempted) as ei:
+            _train(tr_int, 5)
+        tr_res = SpreezeTrainer(_cfg(d_int, prioritized=True))
+        _train(tr_res, 5, resume_from=ei.value.snapshot_path)
+
+        assert _trees_equal(tr_ref.state, tr_res.state)
+        assert _trees_equal(tr_ref.replay, tr_res.replay)
+        k = jax.random.PRNGKey(7)
+        _, idx_ref, w_ref = per.sample(tr_ref.replay, k, 32)
+        _, idx_res, w_res = per.sample(tr_res.replay, k, 32)
+        assert np.array_equal(np.asarray(idx_ref), np.asarray(idx_res))
+        assert np.array_equal(np.asarray(w_ref), np.asarray(w_res))
+
+
+def test_async_periodic_snapshots_resumable():
+    """The off-thread snapshot channel produces restorable bundles at
+    the configured cadence while training keeps dispatching."""
+    with tempfile.TemporaryDirectory() as d:
+        cfg = _cfg(d, eval_every_rounds=2, async_eval=True,
+                   worker_heartbeat_s=0)
+        tr = SpreezeTrainer(cfg)
+        hist = tr.train(max_seconds=60, max_frames=4 * 16)
+        assert hist.runtime_stats.get("state_done", 0) >= 1
+        snap = resume_lib.latest(d)
+        assert snap is not None
+        tr2 = SpreezeTrainer(_cfg(d, eval_every_rounds=2,
+                                  async_eval=True, worker_heartbeat_s=0))
+        meta = resume_lib.restore_trainer(tr2, snap)
+        assert tr2.total_frames >= cfg.warmup_frames
+        assert meta["config_sig"] == resume_lib.config_sig(cfg)
+
+
+@pytest.mark.slow
+def test_sharded_preempt_resume_bitwise_identical():
+    """Satellite (d): interrupt a sharded (forced 8-device) run via
+    preemption injection, resume, demand bitwise-equal final params and
+    PER draws. In-process when the suite already has 8 devices (the
+    sharded CI job), else delegated to a subprocess that sets XLA_FLAGS
+    itself."""
+    if len(jax.devices()) >= 8:
+        sys.path.insert(0, os.path.dirname(CHECK))
+        try:
+            from sharded_resume_check import run_check
+        finally:
+            sys.path.pop(0)
+        assert run_check()
+        return
+    pypath = os.pathsep.join(
+        p for p in (os.path.join(ROOT, "src"),
+                    os.environ.get("PYTHONPATH", "")) if p)
+    xla = [f for f in os.environ.get("XLA_FLAGS", "").split()
+           if "xla_force_host_platform_device_count" not in f]
+    xla.append("--xla_force_host_platform_device_count=8")
+    env = dict(os.environ, PYTHONPATH=pypath, XLA_FLAGS=" ".join(xla))
+    r = subprocess.run([sys.executable, CHECK], env=env, cwd=ROOT,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "sharded-resume-determinism: OK" in r.stdout

@@ -211,3 +211,52 @@ def test_trainer_async_visualization_process(tmp_path):
     assert trajs, "async viz worker wrote no trajectories"
     d = np.load(trajs[0])
     assert d["obs"].shape == (200, 3) and np.isfinite(d["rew"]).all()
+
+
+def test_close_timeout_names_stuck_worker():
+    """Satellite of the robustness PR: a worker that cannot join within
+    close()'s timeout must raise naming the thread, not leak silently.
+    Supervision off so nothing replaces the stuck worker."""
+    from repro.core.runtime import SupervisorPolicy
+    release = threading.Event()
+
+    def eval_fn(actor, key):
+        release.wait(30.0)
+        return 0.0
+
+    r = HostRuntime(eval_fn=eval_fn, hist=TrainHistory(),
+                    policy=SupervisorPolicy(supervise=False,
+                                            heartbeat_timeout_s=0))
+    r.publish(_snap(0, "x"))
+    time.sleep(0.05)                 # let the worker claim the snapshot
+    try:
+        with pytest.raises(RuntimeError, match="eval.*failed to join"):
+            r.close(timeout=0.3)
+    finally:
+        release.set()                # unstick for teardown
+
+
+def test_close_succeeds_after_hang_when_watchdog_retired_thread():
+    """With supervision on, a watchdog-retired thread is excluded from
+    the close() leak check: the run ends cleanly despite the hang."""
+    from repro.core.runtime import SupervisorPolicy
+    release = threading.Event()
+
+    def eval_fn(actor, key):
+        if actor == "hang":
+            release.wait(30.0)
+        return 0.0
+
+    r = HostRuntime(eval_fn=eval_fn, hist=TrainHistory(),
+                    policy=SupervisorPolicy(max_restarts=3,
+                                            backoff_base_s=0.001,
+                                            heartbeat_timeout_s=0.15))
+    r.publish(_snap(0, "hang"))
+    deadline = time.time() + 10.0
+    while r.stats()["worker_hangs"] < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    try:
+        r.close(timeout=1.0)         # must NOT raise: thread is retired
+    finally:
+        release.set()
+    assert r.stats()["worker_hangs"] >= 1
